@@ -1,0 +1,31 @@
+"""Fig 17 analogue: concurrent pipeline scaling (1/2/4/7 tenants)."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.pipeline import paper_pipeline
+from repro.data import synth
+from repro.etl_runtime.multitenant import PipelineManager
+
+BATCH = 8192
+N_BATCHES = 4
+
+
+def main():
+    for n in [1, 2, 4, 7]:
+        mgr = PipelineManager()
+        for i in range(n):
+            pipe = paper_pipeline("I", modulus=65536,
+                                  batch_size=BATCH).compile(backend="jnp")
+            mgr.add(f"p{i}", pipe,
+                    lambda i=i: synth.dataset_batches(
+                        "I", rows=N_BATCHES * BATCH, batch_size=BATCH, seed=i))
+        res = mgr.run(n_batches=N_BATCHES)
+        total_rows = sum(r.rows for r in res.values())
+        wall = max(r.seconds for r in res.values())
+        emit(f"fig17/{n}_pipelines", wall,
+             f"{total_rows / wall / 1e6:.2f}Mrows_s_aggregate")
+
+
+if __name__ == "__main__":
+    main()

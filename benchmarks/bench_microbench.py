@@ -1,0 +1,49 @@
+"""Fig 12 analogue: single-feature single-thread pipeline decomposition.
+
+LoadOnly / Stateless / VocabGen / VocabMap per feature type, numpy path
+(the paper's single-CPU-thread measurement)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import operators as O
+from repro.data import synth
+
+ROWS = 200_000
+
+
+def main(rows: int = ROWS):
+    rng = np.random.default_rng(1)
+    dense = rng.lognormal(1.0, 2.0, rows).astype(np.float32)
+    ids = synth._zipf_ids(rng, rows, 1 << 22)
+    hexs = synth._hex_encode(ids, 8).reshape(rows, 1, 8)
+
+    emit("fig12/Dense/LoadOnly", timeit(lambda: dense.copy()),
+         f"{rows/1e6:.1f}Mrows")
+    emit("fig12/Sparse/LoadOnly", timeit(lambda: hexs.copy()),
+         f"{rows/1e6:.1f}Mrows")
+
+    clamp, log = O.Clamp(0.0), O.Logarithm()
+    emit("fig12/Dense/Stateless",
+         timeit(lambda: log.numpy(clamp.numpy(dense))), "Clamp+Log")
+    h2i, mod = O.Hex2Int(8), O.Modulus(8192)
+    sparse_stateless = lambda: mod.numpy(h2i.numpy(hexs))
+    emit("fig12/Sparse/Stateless", timeit(sparse_stateless), "Hex2Int+Mod")
+
+    bounded = sparse_stateless().reshape(-1)
+    for cap, tag in [(8192, "Small"), (524288, "Large")]:
+        vals = (bounded % cap).astype(np.int32)
+        vg = O.VocabGen(cap)
+        emit(f"fig12/{tag}/VocabGen",
+             timeit(lambda: vg.finalize(vg.update(vg.init_state(), vals, 0)),
+                    iters=2), f"cap={cap}")
+        table = vg.finalize(vg.update(vg.init_state(), vals, 0))
+        vm = O.VocabMap(cap)
+        emit(f"fig12/{tag}/VocabMap",
+             timeit(lambda: vm.numpy_apply(vals, table)), f"cap={cap}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Table 2 analogue: per-operator runtime across implementations.
+
+Paper: CPU vs RTX3090 vs A100 vs PipeRec per operator on Dataset I (45M rows).
+Here: numpy-CPU baseline vs XLA-jit vs fused-Pallas(interpret) on a scaled
+Dataset-I column; derived column reports Mrows/s so numbers are scale-free.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import operators as O
+from repro.data import synth
+from repro.kernels import ops as kops, ref as kref
+
+ROWS = 200_000
+
+
+def main(rows: int = ROWS):
+    rng = np.random.default_rng(0)
+    dense = (rng.lognormal(1.0, 2.0, rows).astype(np.float32)
+             * np.where(rng.random(rows) < 0.15, -1, 1))
+    ids = synth._zipf_ids(rng, rows, 1 << 22)
+    hexs = synth._hex_encode(ids, 8).reshape(rows, 1, 8)
+    hex_dm = np.ascontiguousarray(np.moveaxis(hexs, -1, 0))  # digit-major
+    ints = rng.integers(0, 512 * 1024, rows).astype(np.int32)
+
+    cases = [
+        ("Clamp", O.Clamp(0.0), dense.reshape(rows, 1)),
+        ("Logarithm", O.Logarithm(), np.abs(dense).reshape(rows, 1)),
+        ("Hex2Int", O.Hex2Int(8), hexs),
+        ("Modulus", O.Modulus(512 * 1024), ints.reshape(rows, 1)),
+        ("SigridHash", O.SigridHash(512 * 1024), ints.reshape(rows, 1)),
+        ("Bucketize", O.Bucketize([1.0, 10.0, 100.0]), dense.reshape(rows, 1)),
+    ]
+    for name, op, x in cases:
+        t_np = timeit(lambda: op.numpy(x))
+        jx = jnp.asarray(x)
+        jit_fn = jax.jit(op.jnp_expr)
+        t_jit = timeit(lambda: jit_fn(jx).block_until_ready())
+        emit(f"table2/{name}/numpy", t_np, f"{rows / t_np / 1e6:.1f}Mrows_s")
+        emit(f"table2/{name}/xla", t_jit, f"{rows / t_jit / 1e6:.1f}Mrows_s")
+
+    # fused pallas stage (Hex2Int|Modulus — the sparse hot path)
+    mod = O.Modulus(512 * 1024)
+    chain = lambda v: mod.jnp_expr(kref.hex2int_digit_major(v))
+    fn = kops.fused_stage(chain, in_dtype=np.uint8, out_dtype=np.int32,
+                          hex_width=8, interpret=True)
+    jhex = jnp.asarray(hex_dm)
+    t = timeit(lambda: fn(jhex).block_until_ready(), iters=2)
+    emit("table2/Hex2Int+Modulus/pallas_fused", t,
+         f"{rows / t / 1e6:.2f}Mrows_s")
+
+    # VocabGen / VocabMap (8K and 512K — paper's two table sizes)
+    for cap, tag in [(8192, "8K"), (524288, "512K")]:
+        vals = (ids % cap).astype(np.int32)
+        vg = O.VocabGen(cap)
+        t_gen_np = timeit(lambda: vg.finalize(
+            vg.update(vg.init_state(), vals, 0)), iters=2)
+        emit(f"table2/VocabGen-{tag}/numpy", t_gen_np,
+             f"{rows / t_gen_np / 1e6:.2f}Mrows_s")
+        jv = jnp.asarray(vals)
+        build = jax.jit(lambda v: kref.vocab_finalize(kref.vocab_merge(
+            kref.vocab_state_init(cap), kref.vocab_build_chunk(v, cap), 0)))
+        t_gen = timeit(lambda: build(jv).block_until_ready(), iters=2)
+        emit(f"table2/VocabGen-{tag}/xla", t_gen,
+             f"{rows / t_gen / 1e6:.2f}Mrows_s")
+
+        table = vg.finalize(vg.update(vg.init_state(), vals, 0))
+        vm = O.VocabMap(cap)
+        x2 = vals.reshape(rows, 1)
+        t_map_np = timeit(lambda: vm.numpy_apply(x2, table))
+        emit(f"table2/VocabMap-{tag}/numpy", t_map_np,
+             f"{rows / t_map_np / 1e6:.2f}Mrows_s")
+        jt, jx2 = jnp.asarray(table), jnp.asarray(x2)
+        n = O.VocabGen.n_unique(table)
+        lk = jax.jit(lambda x, t: kref.vocab_lookup(x, t, n))
+        t_map = timeit(lambda: lk(jx2, jt).block_until_ready())
+        emit(f"table2/VocabMap-{tag}/xla", t_map,
+             f"{rows / t_map / 1e6:.2f}Mrows_s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Fig 13/15/16 analogue: Pipeline I/II/III latency across implementations
+and datasets (scaled; derived column = Mrows/s and MB/s, scale-free)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import block, emit, timeit
+from repro.core.pipeline import paper_pipeline
+from repro.data import synth
+
+ROWS = {"I": 100_000, "II": 20_000}  # II is ~6x wider per row
+
+
+def bytes_per_row(which: str) -> int:
+    schema = synth.dataset_schema(which)
+    return sum(f.raw_dtype().itemsize * (f.hex_width or 1) for f in schema)
+
+
+def main():
+    for ds in ["I", "II"]:
+        rows = ROWS[ds]
+        raw = next(synth.dataset_batches(ds, rows=rows, batch_size=rows))
+        fit = lambda: synth.dataset_batches(ds, rows=20_000, batch_size=10_000)
+        bpr = bytes_per_row(ds)
+        for which in ["I", "II", "III"]:
+            for backend in ["numpy", "jnp", "pallas"]:
+                if backend == "pallas" and ds == "II":
+                    continue  # interpret-mode cost not informative at width 504
+                p = paper_pipeline(which, schema=synth.dataset_schema(ds),
+                                   small_vocab=8192, large_vocab=524288,
+                                   modulus=65536).compile(backend=backend)
+                p.fit(fit())
+                t = timeit(lambda: block(p(raw)), warmup=1, iters=2)
+                emit(f"fig13_15_16/D-{ds}+P-{which}/{backend}", t,
+                     f"{rows / t / 1e6:.2f}Mrows_s|{rows * bpr / t / 1e6:.0f}MB_s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Table 3+4 analogue: resource/energy accounting of the compiled pipelines.
+
+Power cannot be measured in this container; we report the paper's static
+power MODEL (CPU 150W / PipeRec 17W+~8W dynamic) applied to measured wall
+time as an energy PROXY, clearly labeled, plus the Table-4-style resource
+summary (VMEM/HBM table placement, fused-stage count) from the planner."""
+
+from __future__ import annotations
+
+from benchmarks.common import block, emit, timeit
+from repro.core.pipeline import paper_pipeline
+from repro.data import synth
+
+ROWS = 50_000
+POWER_MODEL_W = {"numpy": 150.0 + 144.0, "jnp": 150.0 + 60.0,
+                 "pallas": 17.0 + 8.0}  # paper Table 3 static+dynamic classes
+
+
+def main():
+    raw = next(synth.dataset_batches("I", rows=ROWS, batch_size=ROWS))
+    for which in ["I", "II", "III"]:
+        for backend in ["numpy", "jnp"]:
+            p = paper_pipeline(which, small_vocab=8192,
+                               large_vocab=524288).compile(backend=backend)
+            p.fit(synth.dataset_batches("I", rows=20_000, batch_size=10_000))
+            t = timeit(lambda: block(p(raw)), iters=2)
+            joules = t * POWER_MODEL_W[backend]
+            emit(f"table3/P-{which}/{backend}", t,
+                 f"energy_proxy={joules:.1f}J@{POWER_MODEL_W[backend]:.0f}W")
+        rs = paper_pipeline(which, small_vocab=8192,
+                            large_vocab=524288).compile("jnp").resource_summary()
+        emit(f"table4/P-{which}/resources", 0.0,
+             f"stages={rs['n_stages']}|vmem_tables={rs['vmem_table_bytes']}"
+             f"|hbm_tables={rs['hbm_table_bytes']}"
+             f"|flops_per_row={rs['flops_per_row']:.0f}")
+
+
+if __name__ == "__main__":
+    main()

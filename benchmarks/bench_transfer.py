@@ -1,0 +1,34 @@
+"""Fig 11 analogue: data-movement micro-benchmark.
+
+Paper: host<->FPGA DMA, FPGA->GPU P2P, RDMA throughput/latency vs size.
+Here: host->device transfer (jax.device_put) and device-resident handoff
+(the zero-copy donation path) vs message size."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+
+
+def main():
+    for size in [1 << 12, 1 << 16, 1 << 20, 1 << 24, 1 << 26]:
+        host = np.random.default_rng(0).integers(
+            0, 255, size // 4, dtype=np.int32)
+        t = timeit(lambda: jax.device_put(host).block_until_ready(), iters=5)
+        emit(f"fig11/host_to_device/{size}B", t,
+             f"{size / t / 2**30:.2f}GiB_s")
+        dev = jax.device_put(host)
+        # device-resident handoff: donated elementwise touch (zero-copy path)
+        f = jax.jit(lambda x: x + 1, donate_argnums=0)
+        t2 = timeit(lambda: f(jax.device_put(host)).block_until_ready(),
+                    iters=5)
+        emit(f"fig11/donated_step/{size}B", t2,
+             f"{size / t2 / 2**30:.2f}GiB_s")
+        del dev
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Shared benchmark utilities. All benches print `name,us_per_call,derived`
+CSV rows (derived = human-relevant rate or ratio for that row)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def timeit(fn, *, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds per call (after warmup)."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+
+
+def block(tree):
+    for v in (tree.values() if isinstance(tree, dict) else tree):
+        if hasattr(v, "block_until_ready"):
+            v.block_until_ready()
+    return tree

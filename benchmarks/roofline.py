@@ -1,0 +1,78 @@
+"""Roofline report: renders experiments/dryrun/*.json into the EXPERIMENTS.md
+§Roofline table (per arch x shape x mesh: three terms, dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPs ratio, improvement note).
+
+    PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+NOTES = {
+    ("compute",): "raise MXU occupancy: larger per-chip tiles / fewer remat "
+                  "recomputes",
+    ("memory",): "cut HBM traffic: bf16 intermediates, fuse elementwise "
+                 "chains, avoid materializing expanded tensors",
+    ("collective",): "cut wire bytes: shard-local dispatch, overlap "
+                     "collectives with compute, compress payloads",
+}
+
+
+def load(dir_: str):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def fmt_row(r) -> str:
+    if not r.get("ok"):
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | FAIL | "
+                f"{r.get('error', '?')[:60]} | | | | |")
+    rf = r["roofline"]
+    t = max(rf["t_compute_s"], rf["t_memory_s"], rf["t_wire_s"])
+    # roofline fraction: ideal (compute-only) time / bound time
+    frac = rf["t_compute_s"] / t if t > 0 else 0.0
+    mem_gib = r["memory"]["per_device_bytes"] / 2 ** 30
+    ratio = r.get("hlo_vs_model_flops") or 0.0
+    return ("| {arch} | {shape} | {mesh} | {c:.4g} | {m:.4g} | {w:.4g} | "
+            "{dom} | {frac:.0%} | {ratio:.2f} | {mem:.1f} |").format(
+        arch=r["arch"], shape=r["shape"],
+        mesh="x".join(str(x) for x in r["mesh"]),
+        c=rf["t_compute_s"], m=rf["t_memory_s"], w=rf["t_wire_s"],
+        dom=rf["dominant"], frac=frac, ratio=ratio, mem=mem_gib)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--markdown", action="store_true", default=True)
+    args = ap.parse_args()
+    recs = load(args.dir)
+    print("| arch | shape | mesh | t_compute(s) | t_memory(s) | t_wire(s) | "
+          "dominant | roofline-frac | HLO/model flops | mem GiB/dev |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in sorted(recs, key=lambda x: (x["arch"], x["shape"],
+                                         str(x["mesh"]))):
+        print(fmt_row(r))
+    ok = [r for r in recs if r.get("ok")]
+    print(f"\n{len(ok)}/{len(recs)} cells OK")
+    # worst offenders for the perf loop
+    def frac(r):
+        rf = r["roofline"]
+        t = max(rf["t_compute_s"], rf["t_memory_s"], rf["t_wire_s"])
+        return rf["t_compute_s"] / t if t else 0
+    worst = sorted(ok, key=frac)[:3]
+    print("\nworst roofline fractions (hillclimb candidates):")
+    for r in worst:
+        print(f"  {r['cell']}: frac={frac(r):.1%} "
+              f"dominant={r['roofline']['dominant']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Benchmark harness — one section per paper table/figure.
+
+Usage: ``PYTHONPATH=src python -m benchmarks.run [--only fig13]``
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="substring filter on section names")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_concurrent, bench_microbench,
+                            bench_operators, bench_overlap, bench_pipelines,
+                            bench_resources, bench_transfer)
+    sections = [
+        ("table2_operators", bench_operators.main),
+        ("fig12_microbench", bench_microbench.main),
+        ("fig13_15_16_pipelines", bench_pipelines.main),
+        ("fig11_transfer", bench_transfer.main),
+        ("fig14_overlap", bench_overlap.main),
+        ("fig17_concurrent", bench_concurrent.main),
+        ("table3_4_resources", bench_resources.main),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in sections:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.perf_counter()
+        try:
+            fn()
+            print(f"# section {name} done in {time.perf_counter()-t0:.1f}s",
+                  flush=True)
+        except Exception:
+            failures += 1
+            print(f"# section {name} FAILED", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

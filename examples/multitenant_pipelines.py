@@ -1,0 +1,50 @@
+"""Multi-tenant ETL: heterogeneous pipelines sharing one accelerator
+(paper §3.4 Q1/Q2 + §4.8), including a hot swap (partial-reconfiguration
+analogue).
+
+    PYTHONPATH=src python examples/multitenant_pipelines.py
+"""
+
+import time
+
+import numpy as np
+
+from repro.core.pipeline import paper_pipeline
+from repro.data import synth
+from repro.etl_runtime.multitenant import PipelineManager
+
+
+def main():
+    mgr = PipelineManager()
+    # heterogeneous tenants: stateless, small-vocab, large-vocab
+    for name, which in [("stateless", "I"), ("vocab8k", "II"),
+                        ("vocab512k", "III")]:
+        pipe = paper_pipeline(which, small_vocab=8192, large_vocab=524288,
+                              batch_size=4096).compile(backend="jnp")
+        pipe.fit(synth.dataset_batches("I", rows=8192, batch_size=8192))
+        mgr.add(name, pipe,
+                lambda name=name: synth.dataset_batches(
+                    "I", rows=4 * 4096, batch_size=4096,
+                    seed=hash(name) % 100))
+
+    res = mgr.run(n_batches=4)
+    for name, r in res.items():
+        print(f"[tenant {name:10s}] {r.rows_per_s:>10,.0f} rows/s "
+              f"({r.batches} batches)")
+
+    # hot swap: replace the stateless tenant with a new pipeline in O(1)
+    new_pipe = paper_pipeline("I", modulus=1024,
+                              batch_size=4096).compile(backend="jnp")
+    t0 = time.perf_counter()
+    mgr.swap("stateless", new_pipe,
+             lambda: synth.dataset_batches("I", rows=2 * 4096,
+                                           batch_size=4096, seed=5))
+    print(f"[swap] reconfigured tenant in {1e3*(time.perf_counter()-t0):.2f}ms"
+          " (compiled-executable swap; no recompilation)")
+    res = mgr.run(n_batches=2)
+    print(f"[tenant stateless] {res['stateless'].rows_per_s:,.0f} rows/s "
+          "after swap")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Serve a small model with batched requests (prefill + decode loop).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch mamba2_370m
+"""
+
+import argparse
+
+from repro.launch import serve as serve_launch
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2_370m")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=24)
+    args = ap.parse_args()
+    serve_launch.main(["--arch", args.arch, "--reduced",
+                       "--batch", str(args.batch),
+                       "--max-new", str(args.max_new)])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Train an assigned-architecture LM on the streaming token pipeline.
+
+    PYTHONPATH=src python examples/train_lm.py --arch llama3_2_3b --steps 100
+
+Uses the reduced (CPU-runnable) config of any of the 10 assigned
+architectures; the ETL layer is the SigridHash token pipeline, overlapped
+with training exactly like the recommender path.
+"""
+
+import argparse
+
+from repro.launch import train as train_launch
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3_2_3b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="")
+    args = ap.parse_args()
+    train_launch.main([
+        "--arch", args.arch, "--reduced", "--steps", str(args.steps),
+        "--batch", str(args.batch), "--seq", str(args.seq),
+        "--ckpt-dir", args.ckpt_dir])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,265 @@
+"""Planner: lowers the symbolic DAG into an ExecutionPlan (paper §3.1).
+
+The five planning steps mirror the paper's planner-compiler:
+  (1) freeze operator parameters + verify type/shape constraints
+      (done eagerly at DAG construction; re-checked here),
+  (2) fuse compatible stateless operators into streaming stages,
+  (3) choose parallelism: N lanes x W vector width per stage,
+  (4) place vocabulary state in VMEM (BRAM analogue) or HBM and size tables,
+  (5) emit the runtime plan: stage list, buffer specs, batching policy.
+
+The plan is backend-neutral; compiler.py lowers it to numpy / jnp / Pallas.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core import operators as ops_lib
+from repro.core.dag import Graph, Node, NodeType
+
+VMEM_TABLE_BUDGET = 4 * 1024 * 1024  # tables at or under this live in VMEM
+
+
+@dataclasses.dataclass
+class BufferSpec:
+    name: str
+    width: int
+    dtype: np.dtype
+    hex_width: int = 0
+
+    @property
+    def bytes_per_row(self) -> int:
+        per = self.dtype.itemsize * self.width
+        return per * (self.hex_width or 1)
+
+
+@dataclasses.dataclass
+class FusedStage:
+    """A chain of fusable stateless ops -> one streaming kernel (Stage-A)."""
+
+    stage_id: str
+    in_buf: str
+    out_buf: str
+    ops: list
+    in_dtype: np.dtype
+    out_dtype: np.dtype
+    in_hex_width: int = 0
+    # parallelism hints (step 3): N lanes x W vector width
+    lanes: int = 8
+    vector_width: int = 128
+
+    @property
+    def flops_per_elem(self) -> float:
+        return sum(op.flops_per_elem for op in self.ops)
+
+
+@dataclasses.dataclass
+class CrossStage:
+    stage_id: str
+    op: ops_lib.Cartesian
+    in_a: str
+    in_b: str
+    out_buf: str
+
+
+@dataclasses.dataclass
+class OneHotStage:
+    stage_id: str
+    op: ops_lib.OneHot
+    in_buf: str
+    out_buf: str
+
+
+@dataclasses.dataclass
+class VocabLookupStage:
+    stage_id: str
+    vocab_id: str
+    in_buf: str
+    out_buf: str
+    capacity: int
+    placement: str  # "vmem" | "hbm"
+
+
+@dataclasses.dataclass
+class VocabFit:
+    vocab_id: str
+    in_buf: str
+    capacity: int
+    placement: str
+    min_count: int = 1
+
+
+@dataclasses.dataclass
+class PackOutput:
+    """One tensor of the packed, training-ready batch."""
+
+    name: str
+    buffers: list[str]
+    dtype: np.dtype
+    pad_cols_to: int = 1  # pad concat width up to a multiple (128 for TPU)
+    squeeze: bool = False  # emit (rows,) instead of (rows, 1)
+
+
+@dataclasses.dataclass
+class ExecutionPlan:
+    buffers: dict[str, BufferSpec]
+    stages: list  # topological order, apply phase
+    fit_stage_ids: list[str]  # subset of stages also needed during fit
+    vocab_fits: list[VocabFit]
+    pack: list[PackOutput]
+    source_buffers: list[str]
+
+    def stage_by_id(self, sid: str):
+        for s in self.stages:
+            if s.stage_id == sid:
+                return s
+        raise KeyError(sid)
+
+    # ---- Table-4 analogue: resource summary -----------------------------
+    def resource_summary(self) -> dict:
+        vmem = sum(4 * v.capacity for v in self.vocab_fits if v.placement == "vmem")
+        hbm = sum(4 * v.capacity for v in self.vocab_fits if v.placement == "hbm")
+        flops_row = 0.0
+        bytes_row = 0
+        for s in self.stages:
+            if isinstance(s, FusedStage):
+                w = self.buffers[s.in_buf].width
+                flops_row += s.flops_per_elem * w
+                bytes_row += (self.buffers[s.in_buf].bytes_per_row
+                              + self.buffers[s.out_buf].bytes_per_row)
+            elif isinstance(s, (CrossStage, OneHotStage, VocabLookupStage)):
+                bytes_row += self.buffers[s.out_buf].bytes_per_row
+        return {"vmem_table_bytes": vmem, "hbm_table_bytes": hbm,
+                "flops_per_row": flops_row, "bytes_per_row": bytes_row,
+                "n_stages": len(self.stages), "n_vocabs": len(self.vocab_fits)}
+
+
+class Planner:
+    def __init__(self, graph: Graph, *, vmem_budget: int = VMEM_TABLE_BUDGET,
+                 lanes: int = 8, vector_width: int = 128):
+        self.graph = graph
+        self.vmem_budget = vmem_budget
+        self.lanes = lanes
+        self.vector_width = vector_width
+
+    def plan(self, pack_outputs: list[tuple[str, list[Node], np.dtype, int, bool]]
+             ) -> ExecutionPlan:
+        sinks = [n for _, nodes, _, _, _ in pack_outputs for n in nodes]
+        order = self.graph.topo_order(sinks)
+
+        # consumers count: multi-consumer intermediates must materialize
+        consumers: dict[str, int] = {}
+        for n in order:
+            for p in n.parents:
+                consumers[p.id] = consumers.get(p.id, 0) + 1
+        sink_ids = {n.id for n in sinks}
+
+        buffers: dict[str, BufferSpec] = {}
+        stages: list = []
+        vocab_fits: list[VocabFit] = []
+        source_buffers: list[str] = []
+        # node.id -> (base buffer name, pending fusable ops, in_dtype, hex_w)
+        chain: dict[str, tuple] = {}
+        materialized: dict[str, str] = {}  # node.id -> buffer name
+        stage_n = 0
+
+        def new_stage_id():
+            nonlocal stage_n
+            stage_n += 1
+            return f"s{stage_n}"
+
+        def materialize(node: Node) -> str:
+            """Ensure node's value exists as a named buffer; emit stages."""
+            if node.id in materialized:
+                return materialized[node.id]
+            base, pending, in_dtype, hexw = chain[node.id]
+            if not pending:
+                materialized[node.id] = base
+                return base
+            out = node.id
+            buffers[out] = BufferSpec(out, node.width, np.dtype(node.dtype))
+            stages.append(FusedStage(
+                stage_id=new_stage_id(), in_buf=base, out_buf=out,
+                ops=list(pending), in_dtype=np.dtype(in_dtype),
+                out_dtype=np.dtype(node.dtype), in_hex_width=hexw,
+                lanes=self.lanes, vector_width=self.vector_width))
+            materialized[node.id] = out
+            return out
+
+        for node in order:
+            if node.kind == NodeType.SOURCE:
+                buffers[node.id] = BufferSpec(node.id, node.width,
+                                              np.dtype(node.dtype),
+                                              hex_width=node.hex_width)
+                source_buffers.append(node.id)
+                chain[node.id] = (node.id, [], node.dtype, node.hex_width)
+                materialized[node.id] = node.id
+            elif node.kind == NodeType.OP and node.op.fusable:
+                (p,) = node.parents
+                base, pending, in_dtype, hexw = chain[p.id]
+                if consumers.get(p.id, 0) > 1 and pending:
+                    # parent reused elsewhere: materialize it, start new chain
+                    pbuf = materialize(p)
+                    base, pending, in_dtype, hexw = pbuf, [], p.dtype, 0
+                chain[node.id] = (base, pending + [node.op], in_dtype, hexw)
+                if node.id in sink_ids or consumers.get(node.id, 0) != 1:
+                    materialize(node)
+            else:
+                # fusion boundary: cross / onehot / vocab
+                parent_bufs = [materialize(p) for p in node.parents]
+                out = node.id
+                sid = new_stage_id()
+                if node.kind == NodeType.CROSS:
+                    buffers[out] = BufferSpec(out, node.width, np.dtype(np.int32))
+                    stages.append(CrossStage(sid, node.op, parent_bufs[0],
+                                             parent_bufs[1], out))
+                elif node.kind == NodeType.VOCAB:
+                    cap = node.op.capacity
+                    placement = ("vmem" if node.op.table_bytes() <= self.vmem_budget
+                                 else "hbm")
+                    vocab_id = f"vocab_{out}"
+                    vocab_fits.append(VocabFit(vocab_id, parent_bufs[0], cap,
+                                               placement,
+                                               min_count=node.op.min_count))
+                    buffers[out] = BufferSpec(out, node.width, np.dtype(np.int32))
+                    stages.append(VocabLookupStage(sid, vocab_id, parent_bufs[0],
+                                                   out, cap, placement))
+                elif isinstance(node.op, ops_lib.OneHot):
+                    buffers[out] = BufferSpec(out, node.width,
+                                              np.dtype(node.op.out_dtype(None)))
+                    stages.append(OneHotStage(sid, node.op, parent_bufs[0], out))
+                else:
+                    raise NotImplementedError(f"node {node}")
+                chain[node.id] = (out, [], node.dtype, 0)
+                materialized[node.id] = out
+
+        # force-materialize every pack input
+        pack = []
+        for name, nodes, dtype, pad_to, squeeze in pack_outputs:
+            bufs = [materialize(n) for n in nodes]
+            pack.append(PackOutput(name, bufs, np.dtype(dtype), pad_to, squeeze))
+
+        fit_stage_ids = self._fit_closure(stages, vocab_fits)
+        return ExecutionPlan(buffers=buffers, stages=stages,
+                             fit_stage_ids=fit_stage_ids,
+                             vocab_fits=vocab_fits, pack=pack,
+                             source_buffers=source_buffers)
+
+    @staticmethod
+    def _fit_closure(stages, vocab_fits) -> list[str]:
+        """Stage ids needed to produce every VocabFit input buffer."""
+        needed: set[str] = {vf.in_buf for vf in vocab_fits}
+        fit_ids: list[str] = []
+        for s in reversed(stages):
+            outs = {getattr(s, "out_buf", None)}
+            if outs & needed:
+                fit_ids.append(s.stage_id)
+                for attr in ("in_buf", "in_a", "in_b"):
+                    b = getattr(s, attr, None)
+                    if b:
+                        needed.add(b)
+        return list(reversed(fit_ids))

@@ -1,0 +1,124 @@
+"""Post-SPMD HLO analysis: collective inventory + roofline terms.
+
+``cost_analysis()`` gives FLOPs and bytes but NOT collective traffic; we parse
+the compiled (post-partitioning) HLO text and sum the bytes of every
+all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute.
+
+Two numbers are reported per run:
+- ``collective_bytes``: plain sum of collective op output sizes (the task's
+  prescribed metric);
+- ``wire_bytes``: ring-algorithm wire traffic per device
+  (all-reduce 2(S-1)/S, all-gather/all-to-all (S-1)/S of the full payload,
+  reduce-scatter (S-1) x shard, permute 1x) — the physically-meaningful
+  number used for the collective roofline term.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*(?P<out>\(?[^=]*?)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<start>-start)?\(", re.M)
+_GROUPS_RE = re.compile(
+    r"replica_groups=(?:\{(?P<explicit>[^}]*(?:\},\{[^}]*)*)\}\}|"
+    r"\[(?P<iota>[\d,]+)\]<=\[\d+\])")
+_PERMUTE_PAIRS_RE = re.compile(r"source_target_pairs=\{")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if not m:
+        return 2
+    if m.group("iota"):
+        dims = [int(x) for x in m.group("iota").split(",")]
+        return dims[-1] if len(dims) > 1 else dims[0]
+    first = m.group("explicit").split("},{")[0].strip("{}")
+    return max(len([t for t in first.split(",") if t.strip() != ""]), 1)
+
+
+def collect_collectives(hlo_text: str) -> dict:
+    """Inventory of collectives: per-op count, payload bytes, wire bytes."""
+    stats = defaultdict(lambda: {"count": 0, "bytes": 0, "wire_bytes": 0.0})
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        op = m.group("op")
+        out_b = _shape_bytes(m.group("out"))
+        s = _group_size(line)
+        if op == "all-reduce":
+            wire = 2.0 * (s - 1) / s * out_b
+        elif op in ("all-gather", "all-to-all"):
+            wire = (s - 1) / s * out_b
+        elif op == "reduce-scatter":
+            wire = float((s - 1)) * out_b  # out is the scattered shard
+        else:  # collective-permute
+            wire = float(out_b)
+        st = stats[op]
+        st["count"] += 1
+        st["bytes"] += out_b
+        st["wire_bytes"] += wire
+    return dict(stats)
+
+
+def summarize(hlo_text: str) -> dict:
+    st = collect_collectives(hlo_text)
+    return {
+        "per_op": st,
+        "collective_bytes": sum(v["bytes"] for v in st.values()),
+        "wire_bytes": sum(v["wire_bytes"] for v in st.values()),
+        "n_collectives": sum(v["count"] for v in st.values()),
+    }
+
+
+# ---------------------------------------------------------------------------
+# roofline terms (TPU v5e-class constants)
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link (~ per-device effective)
+
+
+def roofline_terms(flops: float, hbm_bytes: float, collective_bytes: float,
+                   wire_bytes: float, chips: int) -> dict:
+    """Three terms in seconds.
+
+    cost_analysis numbers come from the per-device (post-SPMD) module, so
+    compute/memory terms divide by the single-chip peak; the task-prescribed
+    collective term divides the plain byte sum by chips x link_bw, and we also
+    report the ring-model wire time (wire_bytes / ICI_BW, per device).
+    """
+    t_compute = flops / PEAK_FLOPS_BF16
+    t_memory = hbm_bytes / HBM_BW
+    t_collective = collective_bytes / (chips * ICI_BW)
+    t_wire = wire_bytes / ICI_BW
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", max(t_collective, t_wire))),
+                   key=lambda kv: kv[1])[0]
+    return {"t_compute_s": t_compute, "t_memory_s": t_memory,
+            "t_collective_s": t_collective, "t_wire_s": t_wire,
+            "dominant": dominant}

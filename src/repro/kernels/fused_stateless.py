@@ -1,0 +1,84 @@
+"""Fused stateless ETL stage as a Pallas TPU kernel (PipeRec Stage-A).
+
+The planner fuses a chain of stateless operators; the compiler code-generates a
+single elementwise ``chain_fn`` and this factory wraps it in a streaming kernel:
+
+  HBM --(one read)--> VMEM block --(fused chain, VPU)--> VMEM --(one write)--> HBM
+
+which is the TPU statement of the paper's "II=1 deeply-pipelined dataflow with
+no intermediate materialization": each byte crosses HBM exactly twice.
+
+Tiling
+------
+- plain input : x[R, C]            block (block_rows, block_cols)
+- hex input   : x[w, R, C] uint8   block (w, block_rows, block_cols)
+  (digit-major layout keeps the trailing two dims = TPU sublane x lane tile;
+  the fold over w runs in registers — the FPGA shift-register analogue)
+
+Block columns are multiples of 128 (VPU lane width = the paper's W);
+block rows are multiples of 8 (sublanes); grid = N parallel lanes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def make_fused_stage(chain_fn, *, in_dtype, out_dtype, hex_width: int = 0,
+                     block_rows: int = 256, block_cols: int = 512,
+                     interpret: bool = True):
+    """Build a jit-compatible fn: x -> fused(x).
+
+    chain_fn: elementwise block function. For hex inputs it receives the
+    (w, br, bc) uint8 block and must fold the leading digit axis itself.
+    """
+
+    def kernel(x_ref, o_ref):
+        o_ref[...] = chain_fn(x_ref[...]).astype(o_ref.dtype)
+
+    @functools.partial(jax.jit, static_argnames=())
+    def run(x):
+        if hex_width:
+            w, rows, cols = x.shape
+            assert w == hex_width, (x.shape, hex_width)
+        else:
+            rows, cols = x.shape
+        br = min(block_rows, _round_up(rows, 8))
+        bc = min(block_cols, _round_up(cols, 128))
+        rp, cp = _round_up(rows, br), _round_up(cols, bc)
+        # pad to block multiples (padding lanes carry zeros; sliced off below)
+        if hex_width:
+            xp = jnp.pad(x, ((0, 0), (0, rp - rows), (0, cp - cols)))
+            in_spec = pl.BlockSpec((hex_width, br, bc), lambda i, j: (0, i, j))
+        else:
+            xp = jnp.pad(x, ((0, rp - rows), (0, cp - cols)))
+            in_spec = pl.BlockSpec((br, bc), lambda i, j: (i, j))
+        grid = (rp // br, cp // bc)
+        out = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[in_spec],
+            out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((rp, cp), out_dtype),
+            interpret=interpret,
+        )(xp)
+        return out[:rows, :cols]
+
+    return run
+
+
+def vmem_bytes_estimate(in_dtype, out_dtype, hex_width: int,
+                        block_rows: int, block_cols: int) -> int:
+    """Planner helper: VMEM working set claimed by one grid step."""
+    in_b = np.dtype(in_dtype).itemsize * block_rows * block_cols * (hex_width or 1)
+    out_b = np.dtype(out_dtype).itemsize * block_rows * block_cols
+    return 2 * (in_b + out_b)  # x2 for double buffering

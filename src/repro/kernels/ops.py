@@ -1,0 +1,63 @@
+"""Jit'd public wrappers over the Pallas kernels.
+
+``interpret`` defaults to True on CPU (kernel bodies execute in Python for
+correctness validation) and False when a real TPU backend is present.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import embedding_bag as _bag
+from repro.kernels import fused_stateless as _fused
+from repro.kernels import packer_kernel as _packer
+from repro.kernels import vocab as _vocab
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def fused_stage(chain_fn, *, in_dtype, out_dtype, hex_width=0,
+                block_rows=256, block_cols=512, interpret=None):
+    if interpret is None:
+        interpret = default_interpret()
+    return _fused.make_fused_stage(
+        chain_fn, in_dtype=in_dtype, out_dtype=out_dtype, hex_width=hex_width,
+        block_rows=block_rows, block_cols=block_cols, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "partitions", "interpret"))
+def vocab_build_chunk(values, *, capacity, partitions=1, interpret=None):
+    if interpret is None:
+        interpret = default_interpret()
+    return _vocab.vocab_build_chunk(values, capacity, partitions=partitions,
+                                    interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("partitions", "interpret"))
+def vocab_lookup(x, table, n_unique, *, partitions=1, interpret=None):
+    if interpret is None:
+        interpret = default_interpret()
+    return _vocab.vocab_lookup(x, table, n_unique, partitions=partitions,
+                               interpret=interpret)
+
+
+def packer(col_widths, in_dtypes, out_dtype, *, pad_cols_to=128,
+           block_rows=256, interpret=None):
+    if interpret is None:
+        interpret = default_interpret()
+    return jax.jit(_packer.make_packer(
+        col_widths, in_dtypes, out_dtype, pad_cols_to=pad_cols_to,
+        block_rows=block_rows, interpret=interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("partitions", "interpret"))
+def embedding_bag(table, indices, *, partitions=1, interpret=None):
+    if interpret is None:
+        interpret = default_interpret()
+    return _bag.embedding_bag(table, indices, partitions=partitions,
+                              interpret=interpret)

@@ -1,0 +1,143 @@
+"""Vocabulary build (VocabGen) and lookup (VocabMap) Pallas kernels.
+
+TPU adaptation of the paper's stateful operators (§3.2.2):
+
+VocabGen — the FPGA builds the table in a pipelined RAW-serialized loop
+(II = 2 cycles on-chip, ~6 off-chip).  On TPU the equivalent structure is a
+table *partitioned across the grid* (the paper's "P HBM banks"): each grid
+step owns one table partition in VMEM and scans the value stream, keeping the
+min first-occurrence position for in-partition values.  The serial
+read-modify-write over the stream inside a partition mirrors the paper's
+RAW-limited II; partitions run in parallel exactly like HBM banks.
+
+VocabMap — keyed lookups against the frozen table.  Partition-parallel form:
+each grid step gathers hits for its table partition; a max-combine across
+partitions assembles the result (every key hits exactly one partition, misses
+contribute -1).  This avoids unsupported full-table dynamic gathers when the
+table exceeds VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+ABSENT32 = 2 ** 31 - 1  # python int: safe to close over inside kernel bodies
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+# ---------------------------------------------------------------------------
+# VocabGen: chunk-local first-occurrence build
+# ---------------------------------------------------------------------------
+
+def _build_kernel(vals_ref, fp_ref, *, part_size: int, n_vals: int):
+    """Grid dim 0 = table partition p. fp_ref block: partition of first_pos."""
+    p = pl.program_id(0)
+    lo = p * part_size
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        fp_ref[...] = jnp.full_like(fp_ref, ABSENT32)
+
+    vals = vals_ref[...]  # (1, chunk) int32 block of the stream
+    chunk = vals.shape[-1]
+    base = pl.program_id(1) * chunk
+
+    def body(i, _):
+        v = vals[0, i] - lo
+        inb = (v >= 0) & (v < part_size)
+
+        @pl.when(inb & (base + i < n_vals))
+        def _upd():
+            cur = fp_ref[0, v]
+            fp_ref[0, v] = jnp.minimum(cur, base + i)
+
+        return 0
+
+    jax.lax.fori_loop(0, chunk, body, 0)
+
+
+def vocab_build_chunk(values, capacity: int, *, partitions: int = 1,
+                      stream_block: int = 4096, interpret: bool = True):
+    """First-occurrence position within one chunk. int32[capacity], ABSENT32=absent.
+
+    values: int32[n] in [0, capacity).
+    """
+    n = int(values.shape[0])
+    if capacity % max(partitions, 1):
+        raise ValueError("capacity must divide evenly into partitions")
+    part = capacity // partitions
+    nb = _round_up(max(n, 1), stream_block)
+    vp = jnp.pad(values, (0, nb - n), constant_values=-1).reshape(1, nb)
+
+    out = pl.pallas_call(
+        functools.partial(_build_kernel, part_size=part, n_vals=n),
+        grid=(partitions, nb // stream_block),
+        in_specs=[pl.BlockSpec((1, stream_block), lambda p, c: (0, c))],
+        out_specs=pl.BlockSpec((1, part), lambda p, c: (0, p)),
+        out_shape=jax.ShapeDtypeStruct((1, capacity), jnp.int32),
+        interpret=interpret,
+    )(vp)
+    return out[0]
+
+
+# ---------------------------------------------------------------------------
+# VocabMap: partition-parallel gather
+# ---------------------------------------------------------------------------
+
+def _lookup_kernel(x_ref, tbl_ref, o_ref, *, part_size: int):
+    """Grid: (row blocks, partitions). o accumulates max over partitions."""
+    p = pl.program_id(1)
+    lo = p * part_size
+    x = x_ref[...]
+
+    @pl.when(p == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, -1)
+
+    local = x - lo
+    inb = (local >= 0) & (local < part_size)
+    safe = jnp.where(inb, local, 0)
+    tbl = tbl_ref[...]  # (1, part_size)
+    got = jnp.take(tbl[0], safe.reshape(-1), axis=0).reshape(x.shape)
+    got = jnp.where(inb, got, -1)
+    o_ref[...] = jnp.maximum(o_ref[...], got)
+
+
+def vocab_lookup(x, table, n_unique, *, partitions: int = 1,
+                 block_rows: int = 256, interpret: bool = True):
+    """Map x through table (absent -> -1 -> OOV index n_unique).
+
+    x: int32[rows, cols] in [0, capacity); table: int32[capacity].
+    """
+    rows, cols = x.shape
+    capacity = int(table.shape[0])
+    if capacity % max(partitions, 1):
+        raise ValueError("capacity must divide evenly into partitions")
+    part = capacity // partitions
+    br = min(block_rows, _round_up(rows, 8))
+    bc = _round_up(cols, 128)
+    rp = _round_up(rows, br)
+    xp = jnp.pad(x, ((0, rp - rows), (0, bc - cols)))
+    tbl = table.reshape(1, capacity)
+
+    out = pl.pallas_call(
+        functools.partial(_lookup_kernel, part_size=part),
+        grid=(rp // br, partitions),
+        in_specs=[
+            pl.BlockSpec((br, bc), lambda r, p: (r, 0)),
+            pl.BlockSpec((1, part), lambda r, p: (0, p)),
+        ],
+        out_specs=pl.BlockSpec((br, bc), lambda r, p: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((rp, bc), jnp.int32),
+        interpret=interpret,
+    )(xp, tbl)
+    out = out[:rows, :cols]
+    return jnp.where(out >= 0, out, n_unique).astype(jnp.int32)

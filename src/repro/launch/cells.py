@@ -1,0 +1,154 @@
+"""Cell construction: (arch x shape x mesh) -> jitted step + abstract inputs.
+
+Shared by the dry-run (lower/compile with ShapeDtypeStructs — no allocation)
+and by tests (small meshes).  A "cell" follows the task matrix:
+
+- train_4k     : train_step (loss + grads + optimizer update)
+- prefill_32k  : serve prefill (prompt -> logits + cache)
+- decode_32k   : serve_step (one token against a seq_len KV cache/state)
+- long_500k    : serve_step, sub-quadratic families only
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ALL_SHAPES, ModelConfig, ShapeCfg, TrainConfig
+from repro.configs.registry import ARCH_IDS, canonical, get_config
+from repro.distributed import sharding as shd
+from repro.launch.presets import train_preset
+from repro.models.api import Model, build_model, input_specs
+from repro.training.train_loop import TrainState, make_train_step
+
+# long_500k requires sub-quadratic attention (see DESIGN.md
+# §Arch-applicability): SSM state, hybrid, or SWA ring caches qualify.
+LONG_CONTEXT_OK = {"mamba2_370m", "zamba2_2_7b", "mixtral_8x7b"}
+
+
+def iter_cells():
+    """Yield (arch, shape, skip_reason|None) for the full 10x4 matrix."""
+    for arch in ARCH_IDS:
+        for shape in ALL_SHAPES:
+            skip = None
+            if shape.name == "long_500k" and arch not in LONG_CONTEXT_OK:
+                skip = ("full quadratic attention at 524k context — shape "
+                        "excluded for pure full-attention archs")
+            yield arch, shape, skip
+
+
+@dataclasses.dataclass
+class CellPlan:
+    arch: str
+    shape: ShapeCfg
+    cfg: ModelConfig
+    kind: str
+    jitted: Any           # jit-wrapped callable
+    abstract_args: tuple  # ShapeDtypeStructs to .lower(*args)
+    chips: int
+    model_flops: float    # 6ND (train) / 2ND (prefill) / 2N_act*B (decode)
+
+
+def _to_sharding(mesh, tree_of_specs):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree_of_specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _abstract(tree_of_shapes, tree_of_shardings):
+    return jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        tree_of_shapes, tree_of_shardings)
+
+
+def plan_cell(arch: str, shape: ShapeCfg, mesh: Mesh,
+              tcfg: Optional[TrainConfig] = None) -> CellPlan:
+    arch = canonical(arch)
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    tcfg = tcfg or train_preset(arch)
+    # grad-accumulation chunks cannot exceed rows-per-replica
+    dp = int(np.prod([mesh.shape[a] for a in ("pod", "data")
+                      if a in mesh.axis_names]))
+    if tcfg.microbatch > 1:
+        tcfg = dataclasses.replace(
+            tcfg, microbatch=max(1, min(tcfg.microbatch,
+                                        shape.global_batch // max(dp, 1))))
+    chips = mesh.devices.size
+    n_experts = cfg.moe.n_experts if cfg.moe else 0
+    nparams = cfg.param_count()
+    nactive = cfg.active_param_count()
+    tokens = shape.global_batch * shape.seq_len
+
+    batch_shapes = input_specs(cfg, shape)
+    batch_spec = shd.batch_specs(batch_shapes, mesh)
+    batch_abs = _abstract(batch_shapes, _to_sharding(mesh, batch_spec))
+
+    if shape.kind == "train":
+        state_shapes = jax.eval_shape(
+            lambda: TrainState.create(model.init(jax.random.key(0)), tcfg))
+        pspec = shd.param_specs(state_shapes.params, mesh, fsdp=tcfg.fsdp,
+                                n_experts=n_experts)
+        ospec = shd.param_specs(state_shapes.opt, mesh, fsdp=tcfg.fsdp,
+                                n_experts=n_experts)
+        state_spec = TrainState(params=pspec, opt=ospec, step=P())
+        state_sh = _to_sharding(mesh, state_spec)
+        step = make_train_step(model.loss, tcfg, grad_specs=pspec)
+        jitted = jax.jit(step, in_shardings=(state_sh, _to_sharding(mesh, batch_spec)),
+                         out_shardings=(state_sh, None), donate_argnums=(0,))
+        state_abs = _abstract(state_shapes, state_sh)
+        return CellPlan(arch, shape, cfg, "train", jitted,
+                        (state_abs, batch_abs), chips,
+                        6.0 * nactive * tokens)
+
+    # serving cells share param shardings (no optimizer state).  Models whose
+    # TP-sharded weights still exceed ~12GB/chip (Kimi-K2 1T, llama-405B)
+    # additionally shard over the data axes (weight-gathered serving — the
+    # standard big-model serving layout when chips x HBM is the binding
+    # constraint).
+    msize = mesh.shape.get("model", 1)
+    pbytes = nparams * (2 if cfg.param_dtype == "bfloat16" else 4)
+    serve_fsdp = pbytes / msize > 12e9
+    param_shapes = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    pspec = shd.param_specs(param_shapes, mesh, fsdp=serve_fsdp,
+                            n_experts=n_experts)
+    p_sh = _to_sharding(mesh, pspec)
+    p_abs = _abstract(param_shapes, p_sh)
+
+    if shape.kind == "prefill":
+        def prefill_fn(params, batch):
+            return model.prefill(params, batch, shape.seq_len)
+
+        out_shapes = jax.eval_shape(prefill_fn, param_shapes, batch_shapes)
+        cache_spec = shd.cache_specs(out_shapes[1], mesh)
+        jitted = jax.jit(prefill_fn,
+                         in_shardings=(p_sh, _to_sharding(mesh, batch_spec)),
+                         out_shardings=(None, _to_sharding(mesh, cache_spec)))
+        return CellPlan(arch, shape, cfg, "prefill", jitted,
+                        (p_abs, batch_abs), chips, 2.0 * nactive * tokens)
+
+    # decode: one new token against a seq_len-deep cache
+    cache_shapes = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len))
+    cspec = shd.cache_specs(cache_shapes, mesh)
+    c_sh = _to_sharding(mesh, cspec)
+    c_abs = _abstract(cache_shapes, c_sh)
+    pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def serve_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+
+    tok_sh = _to_sharding(mesh, batch_spec)["tokens"]
+    jitted = jax.jit(serve_step,
+                     in_shardings=(p_sh, c_sh, tok_sh, None),
+                     out_shardings=(None, c_sh),
+                     donate_argnums=(1,))
+    tok_abs = _abstract(batch_shapes["tokens"], tok_sh)
+    return CellPlan(arch, shape, cfg, "decode", jitted,
+                    (p_abs, c_abs, tok_abs, pos_abs), chips,
+                    2.0 * nactive * shape.global_batch)

@@ -1,0 +1,136 @@
+"""Unified model API: build_model(cfg) -> Model with init/loss/serve entry
+points and ShapeDtypeStruct input_specs per shape cell (dry-run contract)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeCfg
+from repro.models import encdec, hybrid, ssm, transformer
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    init: Callable  # (key) -> params
+    loss: Callable  # (params, batch) -> scalar
+    forward: Callable  # (params, batch) -> logits
+    init_cache: Callable  # (batch, max_len) -> cache
+    prefill: Callable  # (params, batch, max_len) -> (logits, cache)
+    decode_step: Callable  # (params, cache, tokens, pos) -> (logits, cache)
+
+    def param_shapes(self):
+        return jax.eval_shape(self.init, jax.random.key(0))
+
+
+def _token_specs(cfg: ModelConfig, shape: ShapeCfg) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCfg) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of a shape cell.
+
+    train/prefill: the full batch; decode: the per-step token batch (the KV
+    cache / SSM state is an internal spec produced by cache_specs()).
+    Modality frontends are stubs: whisper gets precomputed frame embeddings,
+    internvl2 gets patch embeddings (see DESIGN.md).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+    if cfg.family == "encdec":
+        # audio stub: frame embeddings; decoder trains on `seq_len` tokens
+        return {"frames": jax.ShapeDtypeStruct((B, cfg.enc_seq, cfg.d_model),
+                                               jnp.float32),
+                "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if cfg.family == "vlm" and shape.kind == "train":
+        text = max(S - cfg.n_patches, 1)
+        return {"patch_embeds": jax.ShapeDtypeStruct(
+                    (B, cfg.n_patches, cfg.d_model), jnp.float32),
+                "tokens": jax.ShapeDtypeStruct((B, text), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((B, text), jnp.int32)}
+    return _token_specs(cfg, shape)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        mod = transformer
+
+        def loss(params, batch):
+            return mod.loss_fn(params, batch, cfg)
+
+        def fwd(params, batch):
+            return mod.forward(params, batch["tokens"], cfg,
+                               prefix_embeds=batch.get("patch_embeds"))
+
+        def pre(params, batch, max_len):
+            return mod.prefill(params, batch["tokens"], cfg, max_len)
+
+        return Model(cfg=cfg,
+                     init=lambda key: mod.init(key, cfg),
+                     loss=loss, forward=fwd,
+                     init_cache=lambda b, m: mod.init_cache(cfg, b, m),
+                     prefill=pre,
+                     decode_step=lambda p, c, t, pos: mod.decode_step(
+                         p, c, t, pos, cfg))
+    if fam == "ssm":
+        return Model(cfg=cfg,
+                     init=lambda key: ssm.init(key, cfg),
+                     loss=lambda p, b: ssm.loss_fn(p, b, cfg),
+                     forward=lambda p, b: ssm.forward(p, b["tokens"], cfg),
+                     init_cache=lambda b, m: ssm.init_cache(cfg, b, m),
+                     prefill=lambda p, b, m: ssm.prefill(p, b["tokens"], cfg,
+                                                         m),
+                     decode_step=lambda p, c, t, pos: ssm.decode_step(
+                         p, c, t, pos, cfg))
+    if fam == "hybrid":
+        return Model(cfg=cfg,
+                     init=lambda key: hybrid.init(key, cfg),
+                     loss=lambda p, b: hybrid.loss_fn(p, b, cfg),
+                     forward=lambda p, b: hybrid.forward(p, b["tokens"], cfg),
+                     init_cache=lambda b, m: hybrid.init_cache(cfg, b, m),
+                     prefill=lambda p, b, m: hybrid.prefill(p, b["tokens"],
+                                                            cfg, m),
+                     decode_step=lambda p, c, t, pos: hybrid.decode_step(
+                         p, c, t, pos, cfg))
+    if fam == "encdec":
+        return Model(cfg=cfg,
+                     init=lambda key: encdec.init(key, cfg),
+                     loss=lambda p, b: encdec.loss_fn(p, b, cfg),
+                     forward=lambda p, b: encdec.forward(p, b, cfg),
+                     init_cache=lambda b, m: encdec.init_cache(cfg, b, m,
+                                                               cfg.enc_seq),
+                     prefill=lambda p, b, m: encdec.prefill(
+                         p, b["frames"], b["tokens"], cfg, m),
+                     decode_step=lambda p, c, t, pos: encdec.decode_step(
+                         p, c, t, pos, cfg))
+    raise ValueError(f"unknown family {fam!r}")
+
+
+def cache_specs(model: Model, shape: ShapeCfg) -> Any:
+    """ShapeDtypeStruct pytree of the decode cache for a shape cell."""
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len))
+
+
+def random_batch(cfg: ModelConfig, shape: ShapeCfg, seed: int = 0) -> dict:
+    """Concrete random batch matching input_specs (smoke tests)."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for k, spec in input_specs(cfg, shape).items():
+        if np.issubdtype(spec.dtype, np.integer):
+            out[k] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, size=spec.shape), spec.dtype)
+        else:
+            out[k] = jnp.asarray(
+                rng.normal(size=spec.shape).astype(np.float32), spec.dtype)
+    return out

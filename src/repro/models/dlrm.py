@@ -1,0 +1,114 @@
+"""DLRM (arXiv:1906.00091) — the paper's own trainer.
+
+The ETL engine's packed output feeds this directly:
+  dense  : (B, D_dense_padded) f32  -> bottom MLP -> (B, d_emb)
+  sparse : (B, F) int32 indices     -> per-feature embedding lookup
+  label  : (B,) f32 click           -> BCE loss
+
+Feature interaction = pairwise dots between the bottom-MLP output and all
+embedding vectors (upper triangle), concatenated back with the dense vector
+into the top MLP.  Embedding tables are stacked (F, V, d_emb) and sharded
+over the model axis on V (the paper's "sparse embeddings alongside small MLP
+stacks"); the Pallas ``embedding_bag`` kernel is the multi-hot path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_hint
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm_criteo"
+    n_dense: int = 13
+    n_sparse: int = 26
+    vocab_size: int = 524288  # per-feature (post VocabMap, +1 OOV)
+    d_emb: int = 128
+    bot_mlp: tuple = (512, 256, 128)
+    top_mlp: tuple = (1024, 1024, 512, 256, 1)
+    dense_padded: int = 16  # packer pads 13 -> 16 (§Perf E3)
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+
+    def param_count(self) -> int:
+        emb = self.n_sparse * self.vocab_size * self.d_emb
+        dims_b = (self.dense_padded,) + self.bot_mlp
+        mb = sum(a * b + b for a, b in zip(dims_b[:-1], dims_b[1:]))
+        n_pairs = (self.n_sparse + 1) * self.n_sparse // 2
+        top_in = self.bot_mlp[-1] + n_pairs
+        dims_t = (top_in,) + self.top_mlp
+        mt = sum(a * b + b for a, b in zip(dims_t[:-1], dims_t[1:]))
+        return emb + mb + mt
+
+
+def _mlp_init(key, dims, dtype):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [{"w": L.truncated_normal(k, (a, b), dtype, 1.0 / math.sqrt(a)),
+             "b": jnp.zeros((b,), dtype)}
+            for k, a, b in zip(ks, dims[:-1], dims[1:])]
+
+
+def _mlp_apply(layers, x, *, final_linear=True):
+    for i, p in enumerate(layers):
+        x = x @ p["w"] + p["b"]
+        if i < len(layers) - 1 or not final_linear:
+            x = jax.nn.relu(x)
+    return x
+
+
+def init(key, cfg: DLRMConfig):
+    dt = jnp.dtype(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    n_pairs = (cfg.n_sparse + 1) * cfg.n_sparse // 2
+    return {
+        "tables": L.truncated_normal(
+            k1, (cfg.n_sparse, cfg.vocab_size, cfg.d_emb), dt,
+            1.0 / math.sqrt(cfg.d_emb)),
+        "bot_mlp": _mlp_init(k2, (cfg.dense_padded,) + cfg.bot_mlp, dt),
+        "top_mlp": _mlp_init(k3, (cfg.bot_mlp[-1] + n_pairs,) + cfg.top_mlp,
+                             dt),
+    }
+
+
+def forward(params, batch, cfg: DLRMConfig):
+    dense = batch["dense"].astype(jnp.dtype(cfg.compute_dtype))
+    sparse = batch["sparse"][:, :cfg.n_sparse]  # drop packer padding lanes
+    B = dense.shape[0]
+
+    bot = _mlp_apply(params["bot_mlp"], dense, final_linear=False)  # (B, d)
+
+    # per-feature single-hot lookup from stacked tables: (B, F, d)
+    tables = shard_hint(params["tables"], (None, "model", None))
+    emb = jax.vmap(lambda tbl, idx: jnp.take(tbl, idx, axis=0),
+                   in_axes=(0, 1), out_axes=1)(tables, sparse)
+    emb = emb.astype(bot.dtype)
+
+    z = jnp.concatenate([bot[:, None, :], emb], axis=1)  # (B, F+1, d)
+    inter = jnp.einsum("bfd,bgd->bfg", z, z,
+                       preferred_element_type=jnp.float32)
+    f = z.shape[1]
+    iu, ju = jnp.triu_indices(f, k=1)
+    pairs = inter[:, iu, ju]  # (B, F(F+1)/2)
+
+    top_in = jnp.concatenate([bot, pairs.astype(bot.dtype)], axis=1)
+    logit = _mlp_apply(params["top_mlp"], top_in)[:, 0]
+    return logit
+
+
+def loss_fn(params, batch, cfg: DLRMConfig):
+    logit = forward(params, batch, cfg).astype(jnp.float32)
+    y = batch["label"].astype(jnp.float32)
+    # numerically-stable BCE with logits
+    per = jnp.maximum(logit, 0) - logit * y + jnp.log1p(jnp.exp(-jnp.abs(logit)))
+    return per.mean()
+
+
+def predict(params, batch, cfg: DLRMConfig):
+    return jax.nn.sigmoid(forward(params, batch, cfg))

@@ -1,0 +1,191 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one SHARED attention block applied
+every ``shared_attn_period`` layers (arXiv:2411.15242).
+
+The shared block's parameters are reused at each application point (Zamba's
+parameter-efficiency trick), but each application keeps its own KV cache.
+For long-context serving the shared block uses a sliding window (size
+``cfg.sliding_window`` if set, else full) — this is what makes ``long_500k``
+runnable for the hybrid family: SSM state is O(1) and the shared-attn cache is
+bounded by the window.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard_hint
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models import transformer as T
+
+
+def n_shared_applications(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.shared_attn_period
+
+
+def init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 2)
+    params = S.init(ks[0], cfg)  # embed + mamba blocks + final norm (+head)
+    params["shared_attn"] = T.block_init(ks[1], cfg, moe_layer=False)
+    return params
+
+
+def _mamba_block(cfg, p, x):
+    y = S.mixer_apply(p["mixer"],
+                      L.norm_apply(x, p["ln"], cfg.norm, cfg.norm_eps), cfg)
+    return shard_hint(x + y, ("data", None, None))
+
+
+def hidden_states(params, tokens, cfg: ModelConfig):
+    x = L.embed_lookup(params["embed"], tokens, cfg.cdtype())
+    period = cfg.shared_attn_period
+    mamba_fwd = functools.partial(_mamba_block, cfg)
+    attn_fwd = functools.partial(T._block_fwd, cfg, params["shared_attn"],
+                                 moe_layer=False)
+    if cfg.remat == "full":
+        mamba_fwd = jax.checkpoint(mamba_fwd)
+        attn_fwd = jax.checkpoint(attn_fwd)
+
+    # scan over groups of `period` mamba layers; after each group apply the
+    # shared attention block (params broadcast — reused, not scanned)
+    n_groups = cfg.n_layers // period
+    grouped = jax.tree_util.tree_map(
+        lambda a: a.reshape((n_groups, period) + a.shape[1:]),
+        params["blocks"])
+
+    def group_step(carry, group_params):
+        def inner(c, p):
+            return mamba_fwd(p, c), None
+
+        y, _ = jax.lax.scan(inner, carry, group_params)
+        y = attn_fwd(y)
+        return y, None
+
+    x, _ = jax.lax.scan(group_step, x, grouped)
+    return L.norm_apply(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+
+
+def forward(params, tokens, cfg: ModelConfig):
+    x = hidden_states(params, tokens, cfg)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return L.lm_logits(x, head, cfg.tie_embeddings)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    return L.cross_entropy(forward(params, batch["tokens"], cfg),
+                           batch["labels"], valid_vocab=cfg.vocab_size)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    cache = S.init_cache(cfg, batch, max_len)
+    n_app = n_shared_applications(cfg)
+    window = cfg.sliding_window or max_len
+    kv_len = min(window, max_len)
+    one = L.cache_init(batch, kv_len, cfg.n_kv_heads, cfg.hd, cfg.cdtype())
+    cache["shared_kv"] = jax.tree_util.tree_map(
+        lambda a: jnp.stack([a] * n_app), one)
+    return cache
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig):
+    x = L.embed_lookup(params["embed"], tokens, cfg.cdtype())
+    period = cfg.shared_attn_period
+    n_groups = cfg.n_layers // period
+    grouped_p = jax.tree_util.tree_map(
+        lambda a: a.reshape((n_groups, period) + a.shape[1:]),
+        params["blocks"])
+    regroup = lambda a: a.reshape((n_groups, period) + a.shape[1:])
+    grouped_conv = jax.tree_util.tree_map(regroup, cache["conv"])
+    grouped_ssm = regroup(cache["ssm"])
+    ring = bool(cfg.sliding_window)
+
+    def group_step(carry, inp):
+        p_grp, conv_grp, ssm_grp, kv = inp
+
+        def inner(c, pc):
+            p, conv, ssm = pc
+            y, (nc, ns) = S.mixer_decode(
+                p["mixer"], L.norm_apply(c, p["ln"], cfg.norm, cfg.norm_eps),
+                cfg, conv, ssm)
+            return c + y, (nc, ns)
+
+        y, (nconv, nssm) = jax.lax.scan(inner, carry,
+                                        (p_grp, conv_grp, ssm_grp))
+        y2, new_kv = _shared_decode(cfg, params["shared_attn"], kv, y, pos,
+                                    ring)
+        return y2, (nconv, nssm, new_kv)
+
+    x, (nconv, nssm, nkv) = jax.lax.scan(
+        group_step, x, (grouped_p, grouped_conv, grouped_ssm,
+                        cache["shared_kv"]))
+    x = L.norm_apply(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    flat = lambda a: a.reshape((cfg.n_layers,) + a.shape[2:])
+    new_cache = {"conv": jax.tree_util.tree_map(flat, nconv),
+                 "ssm": flat(nssm),
+                 "shared_kv": nkv}
+    return L.lm_logits(x, head, cfg.tie_embeddings), new_cache
+
+
+def _shared_decode(cfg, p, kv, x, pos, ring):
+    spec = T.attn_spec(cfg)
+    h, new_kv = L.mha(p["attn"],
+                      L.norm_apply(x, p["ln1"], cfg.norm, cfg.norm_eps),
+                      spec, cache=kv, cache_pos=pos, ring=ring)
+    x = x + h
+    y = L.mlp_apply(p["mlp"], L.norm_apply(x, p["ln2"], cfg.norm,
+                                           cfg.norm_eps), cfg.mlp)
+    return x + y, new_kv
+
+
+def prefill(params, tokens, cfg: ModelConfig, max_len: int):
+    """Chunked-SSD + shared-attn prefill; returns (logits, cache)."""
+    B, Sq = tokens.shape
+    period = cfg.shared_attn_period
+    n_groups = cfg.n_layers // period
+    window = cfg.sliding_window or max_len
+    kv_len = min(window, max_len)
+    T_keep = min(Sq, kv_len)
+    tail_pos = jnp.arange(Sq - T_keep, Sq)
+    x = L.embed_lookup(params["embed"], tokens, cfg.cdtype())
+    grouped_p = jax.tree_util.tree_map(
+        lambda a: a.reshape((n_groups, period) + a.shape[1:]),
+        params["blocks"])
+
+    def group_step(carry, p_grp):
+        def inner(c, p):
+            y, (conv, ssmst) = S.mixer_apply(
+                p["mixer"], L.norm_apply(c, p["ln"], cfg.norm, cfg.norm_eps),
+                cfg, return_state=True)
+            return c + y, (conv, ssmst)
+
+        y, (convs, ssms) = jax.lax.scan(inner, carry, p_grp)
+        tail_in = y[:, Sq - T_keep:, :]
+        y = T._block_fwd(cfg, params["shared_attn"], y, moe_layer=False)
+        return y, (convs, ssms, tail_in)
+
+    x, (convs, ssms, tails) = jax.lax.scan(group_step, x, grouped_p)
+    x = L.norm_apply(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = L.lm_logits(x[:, -1:, :], head, cfg.tie_embeddings)
+
+    shared_kv = jax.vmap(
+        lambda tx: T._tail_kv(cfg, params["shared_attn"]["attn"],
+                              params["shared_attn"]["ln1"], tx, tail_pos,
+                              kv_len))(tails)
+    flat = lambda a: a.reshape((cfg.n_layers,) + a.shape[2:])
+    cache = {
+        "conv": jax.tree_util.tree_map(flat, convs),
+        "ssm": flat(ssms),
+        "shared_kv": shared_kv,
+    }
+    return logits, cache

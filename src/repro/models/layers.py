@@ -1,0 +1,365 @@
+"""Shared neural building blocks (pure JAX pytrees; no framework).
+
+Conventions
+-----------
+- Params are nested dicts of jnp arrays; per-layer blocks are STACKED along a
+  leading L axis and consumed with ``jax.lax.scan`` (keeps HLO size O(1) in
+  depth — essential for 126-layer dry-run compiles).
+- Dtype policy: params in ``cfg.param_dtype``, activations in
+  ``cfg.compute_dtype`` (bf16 on TPU), softmax/loss accumulation in f32.
+- Sharding is applied from outside via pjit in_shardings on the param pytree
+  plus a few ``shard_hint`` constraints on activations; layers themselves are
+  mesh-agnostic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import shard_hint
+
+
+def truncated_normal(key, shape, dtype, scale):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, w, eps):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x, w, b, eps):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm_apply(x, p, kind, eps):
+    if kind == "rmsnorm":
+        return rmsnorm(x, p["w"], eps)
+    return layernorm(x, p["w"], p["b"], eps)
+
+
+def norm_init(d, kind, dtype):
+    if kind == "rmsnorm":
+        return {"w": jnp.ones((d,), dtype)}
+    return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim, theta, style):
+    """style 'full': rotate all dims; 'half': rotate first half (ChatGLM 2d)."""
+    rot = head_dim if style == "full" else head_dim // 2
+    inv = 1.0 / (theta ** (np.arange(0, rot, 2, dtype=np.float32) / rot))
+    return jnp.asarray(inv)  # (rot/2,)
+
+
+def apply_rope(x, positions, inv_freq, style):
+    """x: (..., S, H, hd); positions: broadcastable int (..., S)."""
+    hd = x.shape[-1]
+    rot = inv_freq.shape[0] * 2
+    ang = positions[..., None].astype(jnp.float32) * inv_freq  # (...,S,rot/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]  # (...,S,1,rot/2)
+    sin = sin[..., None, :]
+    xr = x[..., :rot].astype(jnp.float32)
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    if rot == hd:
+        return yr.astype(x.dtype)
+    return jnp.concatenate([yr.astype(x.dtype), x[..., rot:]], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA, optional qk-norm / sliding window)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qk_norm: bool = False
+    rope_style: str = "full"  # "full" | "half" | "none"
+    rope_theta: float = 500000.0
+    sliding_window: int = 0  # 0 = full causal
+    causal: bool = True
+
+
+def attn_init(key, spec: AttnSpec, dtype):
+    d, h, kv, hd = spec.d_model, spec.n_heads, spec.n_kv_heads, spec.head_dim
+    ks = jax.random.split(key, 4)
+    sc = 1.0 / math.sqrt(d)
+    p = {
+        "wq": truncated_normal(ks[0], (d, h * hd), dtype, sc),
+        "wk": truncated_normal(ks[1], (d, kv * hd), dtype, sc),
+        "wv": truncated_normal(ks[2], (d, kv * hd), dtype, sc),
+        "wo": truncated_normal(ks[3], (h * hd, d), dtype, 1.0 / math.sqrt(h * hd)),
+    }
+    if spec.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def cache_init(batch, length, n_kv, head_dim, dtype):
+    """KV cache with a true-position array (supports ring buffers for SWA).
+
+    ``pos[s]`` is the absolute position stored in slot s (-1 = empty); masks
+    are derived from it, so ring wraparound needs no special casing.
+    """
+    return {"k": jnp.zeros((batch, length, n_kv, head_dim), dtype),
+            "v": jnp.zeros((batch, length, n_kv, head_dim), dtype),
+            "pos": jnp.full((length,), -1, jnp.int32)}
+
+
+def _mask_from_positions(q_pos, k_pos, causal, window):
+    """(Sq, Sk) additive f32 bias. k_pos = -1 marks empty cache slots."""
+    ok = k_pos[None, :] >= 0
+    if causal:
+        ok &= q_pos[:, None] >= k_pos[None, :]
+    if window:
+        ok &= (q_pos[:, None] - k_pos[None, :]) < window
+    return jnp.where(ok, 0.0, -1e9).astype(jnp.float32)
+
+
+FLASH_THRESHOLD = 8192  # self-attention seqs beyond this use the chunked path
+
+
+def flash_attention(q, k, v, q_pos, k_pos, *, causal, window,
+                    q_chunk=1024, k_chunk=1024):
+    """Chunked attention with online softmax (flash-style, pure JAX).
+
+    Never materializes the (Sq, Sk) score matrix: double lax.scan over query
+    and key chunks carrying (running max, denom, weighted accumulator).  This
+    is the memory-correct formulation for 32k+ contexts; on TPU the inner
+    body is exactly what a fused Pallas attention kernel computes per tile.
+
+    q: (B,Sq,H,D); k,v: (B,Sk,H,D) (kv heads already repeated).
+    q_pos: (Sq,), k_pos: (Sk,) absolute positions (-1 = empty slot).
+    """
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    qc = min(q_chunk, Sq)
+    kc = min(k_chunk, Sk)
+    assert Sq % qc == 0 and Sk % kc == 0, (Sq, qc, Sk, kc)
+    nq, nk = Sq // qc, Sk // kc
+    scale = 1.0 / math.sqrt(D)
+
+    qs = jnp.moveaxis(q.reshape(B, nq, qc, H, D), 1, 0)
+    ks = jnp.moveaxis(k.reshape(B, nk, kc, H, D), 1, 0)
+    vs = jnp.moveaxis(v.reshape(B, nk, kc, H, D), 1, 0)
+    qps = q_pos.reshape(nq, qc)
+    kps = k_pos.reshape(nk, kc)
+
+    def one_q(q_blk, qp):
+        def one_k(carry, inp):
+            m, l, acc = carry
+            k_blk, v_blk, kp = inp
+            s = jnp.einsum("bqhd,bkhd->bhqk", q_blk, k_blk,
+                           preferred_element_type=jnp.float32) * scale
+            s = s + _mask_from_positions(qp, kp, causal, window)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + p.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(v_blk.dtype), v_blk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l, acc), None
+
+        init = (jnp.full((B, H, qc), -1e30, jnp.float32),
+                jnp.zeros((B, H, qc), jnp.float32),
+                jnp.zeros((B, H, qc, D), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(one_k, init, (ks, vs, kps))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.moveaxis(out, 1, 2)  # (B, qc, H, D)
+
+    outs = jax.lax.map(lambda args: one_q(*args), (qs, qps))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Sq, H, D)
+
+
+def mha(p, x, spec: AttnSpec, *, kv_x=None, q_pos=None, cache=None,
+        cache_pos=None, ring=False):
+    """Multi-head attention with GQA + optional KV cache.
+
+    x: (B, Sq, D). kv_x: cross-attention source (B, Sk, D) or None.
+    cache: dict from cache_init, written at cache_pos (ring: modulo length).
+    Ring writes require Sq == 1 (decode) or a non-wrapping span.
+    Returns (out, new_cache).
+    """
+    B, Sq, _ = x.shape
+    h, kv, hd = spec.n_heads, spec.n_kv_heads, spec.head_dim
+    p = cast_tree(p, x.dtype)
+    src = x if kv_x is None else kv_x
+    q = (x @ p["wq"]).reshape(B, Sq, h, hd)
+    k = (src @ p["wk"]).reshape(B, src.shape[1], kv, hd)
+    v = (src @ p["wv"]).reshape(B, src.shape[1], kv, hd)
+    if spec.qk_norm:
+        q = rmsnorm(q, p["q_norm"], 1e-6)
+        k = rmsnorm(k, p["k_norm"], 1e-6)
+    if q_pos is None:
+        q_pos = (jnp.arange(Sq) if cache_pos is None
+                 else cache_pos + jnp.arange(Sq))
+    if spec.rope_style != "none" and kv_x is None:
+        inv = rope_freqs(hd, spec.rope_theta, spec.rope_style)
+        q = apply_rope(q, jnp.broadcast_to(q_pos, (B, Sq)), inv, spec.rope_style)
+        k = apply_rope(k, jnp.broadcast_to(q_pos, (B, Sq)), inv, spec.rope_style)
+
+    if cache is not None:
+        length = cache["k"].shape[1]
+        slot = (cache_pos % length) if ring else cache_pos
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        cpos = jax.lax.dynamic_update_slice(cache["pos"], q_pos.astype(jnp.int32),
+                                            (slot,))
+        cache = {"k": ck, "v": cv, "pos": cpos}
+        k, v, k_pos = ck, cv, cpos
+    else:
+        k_pos = jnp.arange(src.shape[1])
+
+    # GQA: repeat kv heads to match q heads
+    rep = h // kv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+
+    if Sq > 1 and max(Sq, k.shape[1]) > FLASH_THRESHOLD and kv_x is None:
+        # long-context path: chunked online-softmax attention (no S^2 scores)
+        out = flash_attention(q, k, v, q_pos, k_pos, causal=spec.causal,
+                              window=spec.sliding_window).astype(x.dtype)
+        out = out.reshape(B, Sq, h * hd) @ p["wo"]
+        return out, cache
+
+    scale = 1.0 / math.sqrt(hd)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if kv_x is None:  # self-attention mask
+        scores = scores + _mask_from_positions(q_pos, k_pos, spec.causal,
+                                               spec.sliding_window)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    out = out.reshape(B, Sq, h * hd) @ p["wo"]
+    return out, cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d, f, kind, dtype):
+    ks = jax.random.split(key, 3)
+    sc_in, sc_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    if kind == "swiglu":
+        return {"w1": truncated_normal(ks[0], (d, f), dtype, sc_in),
+                "w3": truncated_normal(ks[1], (d, f), dtype, sc_in),
+                "w2": truncated_normal(ks[2], (f, d), dtype, sc_out)}
+    return {"wi": truncated_normal(ks[0], (d, f), dtype, sc_in),
+            "bi": jnp.zeros((f,), dtype),
+            "wo": truncated_normal(ks[1], (f, d), dtype, sc_out),
+            "bo": jnp.zeros((d,), dtype)}
+
+
+def cast_tree(p, dtype):
+    return jax.tree_util.tree_map(lambda a: a.astype(dtype), p)
+
+
+def cast_tree_except(p: dict, dtype, keep: tuple) -> dict:
+    """Cast a flat param dict to dtype, leaving ``keep`` keys untouched
+    (f32 master copies of scalar SSM params)."""
+    return {k: (v if k in keep else
+                jax.tree_util.tree_map(lambda a: a.astype(dtype), v))
+            for k, v in p.items()}
+
+
+def mlp_apply(p, x, kind):
+    p = cast_tree(p, x.dtype)
+    if kind == "swiglu":
+        return (jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])) @ p["w2"]
+    return (jax.nn.gelu(x @ p["wi"] + p["bi"])) @ p["wo"] + p["bo"]
+
+
+# ---------------------------------------------------------------------------
+# embeddings / heads
+# ---------------------------------------------------------------------------
+
+def embed_init(key, vocab, d, dtype):
+    # 1/sqrt(d): keeps tied-head logits O(1) at init
+    return truncated_normal(key, (vocab, d), dtype, d ** -0.5)
+
+
+def embed_lookup(emb, tokens, compute_dtype):
+    out = jnp.take(emb, tokens, axis=0).astype(compute_dtype)
+    return shard_hint(out, ("data", None, None))
+
+
+def lm_logits(x, emb_or_head, tied):
+    if tied:
+        return x @ emb_or_head.T.astype(x.dtype)
+    return x @ emb_or_head.astype(x.dtype)
+
+
+def cross_entropy(logits, labels, *, ignore_id: int = -100,
+                  valid_vocab: int = 0):
+    """Token-level CE in f32; mean over non-ignored positions.
+
+    - The label pick uses a one-hot contraction rather than a gather: with
+      the vocab dim sharded over the model axis, a gather would force GSPMD
+      to all-gather the full logits; the masked sum keeps the reduction local
+      + one small all-reduce.
+    - ``valid_vocab``: when the embedding rows are padded for shardability,
+      logits at ids >= valid_vocab are masked out of the softmax.
+    """
+    lf = logits.astype(jnp.float32)
+    vocab_iota = jnp.arange(logits.shape[-1], dtype=labels.dtype)
+    if valid_vocab and valid_vocab < logits.shape[-1]:
+        lf = jnp.where(vocab_iota >= valid_vocab, -1e9, lf)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    onehot = (labels[..., None] == vocab_iota)
+    ll = jnp.sum(jnp.where(onehot, lf, 0.0), axis=-1)
+    nll = lse - ll
+    mask = (labels != ignore_id).astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def sinusoidal_positions(n, d):
+    pos = np.arange(n)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * i / d)
+    out = np.zeros((n, d), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return jnp.asarray(out)
+
+
+def sinusoidal_at(positions, d):
+    """Sinusoidal embedding at (traced) integer positions: (S,) -> (S, d)."""
+    i = jnp.arange(d // 2, dtype=jnp.float32)
+    ang = positions.astype(jnp.float32)[:, None] / jnp.power(10000.0,
+                                                             2 * i / d)
+    out = jnp.zeros((positions.shape[0], d), jnp.float32)
+    out = out.at[:, 0::2].set(jnp.sin(ang))
+    out = out.at[:, 1::2].set(jnp.cos(ang))
+    return out

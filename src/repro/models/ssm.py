@@ -1,0 +1,307 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) in pure JAX.
+
+Training uses the chunked SSD algorithm: quadratic attention-like compute
+inside chunks of Q tokens (MXU-friendly einsums) + a linear recurrent state
+pass between chunks (lax.scan).  Decoding is the O(1)-per-token recurrence on
+the (H, N, P) state — no KV cache, which is why the ``long_500k`` shape runs
+for this family.
+
+Head layout: d_inner = expand*d_model split into H heads of P=head_dim;
+B/C projections are per-group (G groups broadcast over heads).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard_hint
+from repro.models import layers as L
+
+
+def dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    return d_inner, H, s.n_groups, s.d_state, s.head_dim
+
+
+def mixer_init(key, cfg: ModelConfig, dtype):
+    """Per-stream projections (z/x/B/C/dt) instead of one fused in_proj:
+    a fused projection's mixed-size split offsets do not align with model-
+    axis shard boundaries, forcing GSPMD to all-gather inside the layer scan.
+    Separate weights keep every output cleanly sharded (same flops)."""
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, H, G, N, P = dims(cfg)
+    ks = jax.random.split(key, 9)
+    sc = 1.0 / math.sqrt(d)
+    return {
+        "z_proj": L.truncated_normal(ks[0], (d, d_inner), dtype, sc),
+        "x_proj": L.truncated_normal(ks[1], (d, d_inner), dtype, sc),
+        "b_proj": L.truncated_normal(ks[2], (d, G * N), dtype, sc),
+        "c_proj": L.truncated_normal(ks[3], (d, G * N), dtype, sc),
+        "dt_proj": L.truncated_normal(ks[4], (d, H), dtype, sc),
+        "conv_wx": L.truncated_normal(ks[5], (s.d_conv, d_inner), dtype, 0.5),
+        "conv_bx": jnp.zeros((d_inner,), dtype),
+        "conv_wb": L.truncated_normal(ks[6], (s.d_conv, G * N), dtype, 0.5),
+        "conv_bb": jnp.zeros((G * N,), dtype),
+        "conv_wc": L.truncated_normal(ks[7], (s.d_conv, G * N), dtype, 0.5),
+        "conv_bc": jnp.zeros((G * N,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),  # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),  # softplus(-2) ~ 0.12
+        "norm_w": jnp.ones((d_inner,), dtype),
+        "out_proj": L.truncated_normal(ks[8], (d_inner, d), dtype,
+                                       1.0 / math.sqrt(d_inner)),
+    }
+
+
+def _causal_conv(u, w, b, *, state=None):
+    """Depthwise causal conv. u: (B,S,C); w: (K,C). state: (B,K-1,C) or None.
+
+    Returns (y, new_state) where new_state holds the last K-1 inputs.
+    """
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], K - 1, u.shape[2]), u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    up = jnp.concatenate([pad, u], axis=1)
+    y = sum(up[:, i:i + u.shape[1], :] * w[i] for i in range(K))
+    y = y + b
+    new_state = up[:, -(K - 1):, :]
+    return jax.nn.silu(y), new_state
+
+
+def _ssd_chunked(xh, dt, A, Bh, Ch, chunk, init_state=None):
+    """Chunked SSD scan.
+
+    xh: (B,S,H,P) f32; dt: (B,S,H) f32 (post-softplus); A: (H,) f32 (negative);
+    Bh, Ch: (B,S,H,N) f32.  Returns (y: (B,S,H,P), final_state: (B,H,N,P)).
+    """
+    Bsz, S, H, P = xh.shape
+    N = Bh.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    r = lambda t: t.reshape((Bsz, nc, Q) + t.shape[2:])
+    xc, dtc, Bc, Cc = r(xh), r(dt), r(Bh), r(Ch)
+
+    dA = dtc * A  # (B,nc,Q,H), negative
+    cs = jnp.cumsum(dA, axis=2)  # inclusive cumsum within chunk
+    total = cs[:, :, -1, :]  # (B,nc,H)
+
+    # intra-chunk: y[i] = sum_{j<=i} (C_i . B_j) exp(cs_i - cs_j) dt_j x_j
+    CB = jnp.einsum("bcihn,bcjhn->bcijh", Cc, Bc,
+                    preferred_element_type=jnp.float32)
+    seg = cs[:, :, :, None, :] - cs[:, :, None, :, :]  # (b,c,i,j,h)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = CB * decay * dtc[:, :, None, :, :]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores, xc,
+                         preferred_element_type=jnp.float32)
+
+    # per-chunk local end state: S_c = sum_j exp(total - cs_j) dt_j B_j x_j^T
+    w = jnp.exp(total[:, :, None, :] - cs) * dtc  # (b,c,j,h)
+    S_local = jnp.einsum("bcjh,bcjhn,bcjhp->bchnp", w, Bc, xc,
+                         preferred_element_type=jnp.float32)
+
+    # inter-chunk recurrence over c: S_prev[c] = S_prev[c-1]*exp(total) + local
+    def step(s_prev, inp):
+        tot_c, loc_c = inp
+        s_new = s_prev * jnp.exp(tot_c)[:, :, None, None] + loc_c
+        return s_new, s_prev
+
+    s0 = (jnp.zeros((Bsz, H, N, P), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    final, S_prevs = jax.lax.scan(
+        step, s0, (jnp.moveaxis(total, 1, 0), jnp.moveaxis(S_local, 1, 0)))
+    S_prevs = jnp.moveaxis(S_prevs, 0, 1)  # (B,nc,H,N,P): state BEFORE chunk
+
+    y_inter = jnp.einsum("bcihn,bchnp->bcihp", Cc, S_prevs,
+                         preferred_element_type=jnp.float32)
+    y_inter = y_inter * jnp.exp(cs)[..., None]
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    return y, final
+
+
+def mixer_apply(p, x, cfg: ModelConfig, *, conv_state=None, ssm_state=None,
+                return_state=False):
+    """Full-sequence mixer. x: (B,S,D). Returns y [, (conv_state, ssm_state)]."""
+    d_inner, H, G, N, P = dims(cfg)
+    p = L.cast_tree_except(p, x.dtype, ("A_log", "D", "dt_bias"))
+    cs = conv_state or {}
+    z = x @ p["z_proj"]
+    xr, ncx = _causal_conv(x @ p["x_proj"], p["conv_wx"], p["conv_bx"],
+                           state=cs.get("x"))
+    Braw, ncb = _causal_conv(x @ p["b_proj"], p["conv_wb"], p["conv_bb"],
+                             state=cs.get("b"))
+    Craw, ncc = _causal_conv(x @ p["c_proj"], p["conv_wc"], p["conv_bc"],
+                             state=cs.get("c"))
+    dtraw = x @ p["dt_proj"]
+    new_conv = {"x": ncx, "b": ncb, "c": ncc}
+
+    Bsz, S, _ = x.shape
+    xh = xr.reshape(Bsz, S, H, P).astype(jnp.float32)
+    Bh = Braw.reshape(Bsz, S, G, N).astype(jnp.float32)
+    Ch = Craw.reshape(Bsz, S, G, N).astype(jnp.float32)
+    rep = H // G
+    Bh = jnp.repeat(Bh, rep, axis=2)
+    Ch = jnp.repeat(Ch, rep, axis=2)
+    dt = jax.nn.softplus(dtraw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    y, final = _ssd_chunked(xh, dt, A, Bh, Ch, cfg.ssm.chunk,
+                            init_state=ssm_state)
+    y = y + xh * p["D"][None, None, :, None]
+    y = y.reshape(Bsz, S, d_inner).astype(x.dtype)
+    y = L.rmsnorm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    if return_state:
+        return out, (new_conv, final)
+    return out
+
+
+def mixer_decode(p, x, cfg: ModelConfig, conv_state, ssm_state):
+    """One-token recurrence. x: (B,1,D). Returns (y, (conv_state, ssm_state))."""
+    d_inner, H, G, N, P = dims(cfg)
+    p = L.cast_tree_except(p, x.dtype, ("A_log", "D", "dt_bias"))
+    z = x @ p["z_proj"]
+    xr, ncx = _causal_conv(x @ p["x_proj"], p["conv_wx"], p["conv_bx"],
+                           state=conv_state["x"])
+    Braw, ncb = _causal_conv(x @ p["b_proj"], p["conv_wb"], p["conv_bb"],
+                             state=conv_state["b"])
+    Craw, ncc = _causal_conv(x @ p["c_proj"], p["conv_wc"], p["conv_bc"],
+                             state=conv_state["c"])
+    dtraw = x @ p["dt_proj"]
+    new_conv = {"x": ncx, "b": ncb, "c": ncc}
+
+    Bsz = x.shape[0]
+    xh = xr.reshape(Bsz, H, P).astype(jnp.float32)
+    Bh = jnp.repeat(Braw.reshape(Bsz, G, N), H // G, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(Craw.reshape(Bsz, G, N), H // G, axis=1).astype(jnp.float32)
+    dt = jax.nn.softplus(dtraw.astype(jnp.float32)[:, 0, :] + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)  # (B,H)
+    # state update: S = S*dA + dt * B x^T
+    upd = dt[..., None, None] * Bh[..., :, None] * xh[..., None, :]
+    new_state = ssm_state * dA[..., None, None] + upd
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, new_state,
+                   preferred_element_type=jnp.float32)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(Bsz, 1, d_inner).astype(x.dtype)
+    y = L.rmsnorm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    return y @ p["out_proj"], (new_conv, new_state)
+
+
+# ---------------------------------------------------------------------------
+# pure-Mamba2 LM (mamba2-370m)
+# ---------------------------------------------------------------------------
+
+def init(key, cfg: ModelConfig):
+    dt = cfg.pdtype()
+    ks = jax.random.split(key, 3)
+    d_inner, H, G, N, P = dims(cfg)
+
+    def layer(k):
+        k1, k2 = jax.random.split(k)
+        return {"ln": L.norm_init(cfg.d_model, cfg.norm, dt),
+                "mixer": mixer_init(k1, cfg, dt)}
+
+    params = {
+        "embed": L.embed_init(ks[0], cfg.padded_vocab, cfg.d_model, dt),
+        "blocks": jax.vmap(layer)(jax.random.split(ks[1], cfg.n_layers)),
+        "final_norm": L.norm_init(cfg.d_model, cfg.norm, dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.truncated_normal(
+            ks[2], (cfg.d_model, cfg.padded_vocab), dt,
+            1.0 / math.sqrt(cfg.d_model))
+    return params
+
+
+def _block(cfg, p, x):
+    y = mixer_apply(p["mixer"], L.norm_apply(x, p["ln"], cfg.norm,
+                                             cfg.norm_eps), cfg)
+    return shard_hint(x + y, ("data", None, None))
+
+
+def hidden_states(params, tokens, cfg: ModelConfig):
+    x = L.embed_lookup(params["embed"], tokens, cfg.cdtype())
+    fwd = functools.partial(_block, cfg)
+    if cfg.remat == "full":
+        fwd = jax.checkpoint(fwd)
+
+    def step(carry, p):
+        return fwd(p, carry), None
+
+    x, _ = jax.lax.scan(step, x, params["blocks"])
+    return L.norm_apply(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+
+
+def forward(params, tokens, cfg: ModelConfig):
+    x = hidden_states(params, tokens, cfg)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return L.lm_logits(x, head, cfg.tie_embeddings)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    return L.cross_entropy(forward(params, batch["tokens"], cfg),
+                           batch["labels"], valid_vocab=cfg.vocab_size)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    del max_len  # O(1) state — the whole point
+    d_inner, H, G, N, P = dims(cfg)
+    Lr = cfg.n_layers
+    k = cfg.ssm.d_conv - 1
+    return {
+        "conv": {
+            "x": jnp.zeros((Lr, batch, k, d_inner), cfg.cdtype()),
+            "b": jnp.zeros((Lr, batch, k, G * N), cfg.cdtype()),
+            "c": jnp.zeros((Lr, batch, k, G * N), cfg.cdtype()),
+        },
+        "ssm": jnp.zeros((Lr, batch, H, N, P), jnp.float32),
+    }
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig):
+    del pos  # recurrent: position-free
+    x = L.embed_lookup(params["embed"], tokens, cfg.cdtype())
+
+    def step(carry, pc):
+        p, conv, ssm = pc
+        y, (nconv, nssm) = mixer_decode(
+            p["mixer"], L.norm_apply(carry, p["ln"], cfg.norm, cfg.norm_eps),
+            cfg, conv, ssm)
+        return carry + y, (nconv, nssm)
+
+    x, (nconv, nssm) = jax.lax.scan(
+        step, x, (params["blocks"], cache["conv"], cache["ssm"]))
+    x = L.norm_apply(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return L.lm_logits(x, head, cfg.tie_embeddings), \
+        {"conv": nconv, "ssm": nssm}
+
+
+def prefill(params, tokens, cfg: ModelConfig, max_len: int):
+    """Chunked-SSD prefill; returns (last-token logits, decode-ready cache)."""
+    B, S = tokens.shape
+    x = L.embed_lookup(params["embed"], tokens, cfg.cdtype())
+
+    def step(carry, p):
+        y, (conv, ssm) = mixer_apply(
+            p["mixer"], L.norm_apply(carry, p["ln"], cfg.norm, cfg.norm_eps),
+            cfg, return_state=True)
+        return carry + y, (conv, ssm)
+
+    x, (convs, ssms) = jax.lax.scan(step, x, params["blocks"])
+    x = L.norm_apply(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = L.lm_logits(x[:, -1:, :], head, cfg.tie_embeddings)
+    return logits, {"conv": convs, "ssm": ssms}

@@ -1,0 +1,294 @@
+"""Decoder-only transformer LM (dense GQA / MoE / VLM-prefix variants).
+
+scan-over-layers with stacked block params; remat policy from cfg.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard_hint
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+
+
+def attn_spec(cfg: ModelConfig) -> L.AttnSpec:
+    return L.AttnSpec(d_model=cfg.d_model, n_heads=cfg.n_heads,
+                      n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+                      qk_norm=cfg.qk_norm, rope_style=cfg.rope_style,
+                      rope_theta=cfg.rope_theta,
+                      sliding_window=cfg.sliding_window, causal=True)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def block_init(key, cfg: ModelConfig, *, moe_layer: bool):
+    dt = cfg.pdtype()
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": L.norm_init(cfg.d_model, cfg.norm, dt),
+         "ln2": L.norm_init(cfg.d_model, cfg.norm, dt),
+         "attn": L.attn_init(k1, attn_spec(cfg), dt)}
+    if moe_layer:
+        p["moe"] = moe_lib.moe_init(k2, cfg, dt)
+    else:
+        p["mlp"] = L.mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.mlp, dt)
+    return p
+
+
+def init(key, cfg: ModelConfig):
+    dt = cfg.pdtype()
+    keys = jax.random.split(key, 4)
+    n_dense = cfg.moe.first_dense_layers if cfg.moe else cfg.n_layers
+    n_moe = cfg.n_layers - n_dense if cfg.moe else 0
+
+    params = {"embed": L.embed_init(keys[0], cfg.padded_vocab, cfg.d_model, dt),
+              "final_norm": L.norm_init(cfg.d_model, cfg.norm, dt)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.truncated_normal(
+            keys[1], (cfg.d_model, cfg.padded_vocab), dt,
+            1.0 / (cfg.d_model ** 0.5))
+
+    def stacked(key, n, moe_layer):
+        ks = jax.random.split(key, n)
+        return jax.vmap(lambda k: block_init(k, cfg, moe_layer=moe_layer))(ks)
+
+    if n_dense:
+        params["blocks"] = stacked(keys[2], n_dense, False)
+    if n_moe:
+        params["moe_blocks"] = stacked(keys[3], n_moe, True)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def act_spec(cfg: ModelConfig):
+    return ("data", "model", None) if cfg.seq_parallel else ("data", None, None)
+
+
+def _block_fwd(cfg: ModelConfig, p, x, *, moe_layer: bool):
+    """Megatron-SP boundaries when cfg.seq_parallel: residuals live
+    sequence-sharded; the normed activations are explicitly re-gathered to
+    full sequence before the TP matmuls (otherwise GSPMD resolves the SP<->TP
+    axis conflict by all-gathering the much larger WEIGHTS), and the residual
+    add reduce-scatters back."""
+    spec = attn_spec(cfg)
+    full = ("data", None, None)
+    xn = L.norm_apply(x, p["ln1"], cfg.norm, cfg.norm_eps)
+    if cfg.seq_parallel:
+        xn = shard_hint(xn, full)
+    h, _ = L.mha(p["attn"], xn, spec)
+    x = x + h
+    y = L.norm_apply(x, p["ln2"], cfg.norm, cfg.norm_eps)
+    if cfg.seq_parallel:
+        y = shard_hint(y, full)
+    if moe_layer:
+        y = moe_lib.moe_apply(p["moe"], y, cfg)
+    else:
+        y = L.mlp_apply(p["mlp"], y, cfg.mlp)
+    x = x + y
+    return shard_hint(x, act_spec(cfg))
+
+
+def _remat(cfg, fwd):
+    if cfg.remat == "full":
+        return jax.checkpoint(fwd)
+    if cfg.remat == "dots":
+        # §Perf L2: save (sharded) matmul outputs — backward reuses them
+        # instead of re-deriving through the SP boundary (avoids GSPMD
+        # last-resort replication of weight-gradient dots)
+        return jax.checkpoint(
+            fwd, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return fwd
+
+
+def _scan_blocks(cfg, stacked_params, x, *, moe_layer: bool):
+    fwd = _remat(cfg, functools.partial(_block_fwd, cfg, moe_layer=moe_layer))
+
+    def step(carry, p):
+        return fwd(p, carry), None
+
+    x, _ = jax.lax.scan(step, x, stacked_params)
+    return x
+
+
+def hidden_states(params, tokens, cfg: ModelConfig,
+                  prefix_embeds: Optional[jax.Array] = None):
+    """tokens: (B, S) int32 [; prefix_embeds: (B, P, D) for VLM]."""
+    x = L.embed_lookup(params["embed"], tokens, cfg.cdtype())
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    x = shard_hint(x, act_spec(cfg))
+    if "blocks" in params:
+        x = _scan_blocks(cfg, params["blocks"], x, moe_layer=False)
+    if "moe_blocks" in params:
+        x = _scan_blocks(cfg, params["moe_blocks"], x, moe_layer=True)
+    return L.norm_apply(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+
+
+def forward(params, tokens, cfg: ModelConfig, prefix_embeds=None):
+    x = hidden_states(params, tokens, cfg, prefix_embeds)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = L.lm_logits(x, head, cfg.tie_embeddings)
+    # SP: keep logits token-sharded (CE is then fully local over tokens);
+    # otherwise shard the vocab dim over the model axis
+    sp = ("data", "model", None) if cfg.seq_parallel else ("data", None, "model")
+    return shard_hint(logits, sp)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    prefix = batch.get("patch_embeds") if isinstance(batch, dict) else None
+    logits = forward(params, batch["tokens"], cfg, prefix_embeds=prefix)
+    if prefix is not None:
+        logits = logits[:, prefix.shape[1]:]  # loss only on text positions
+    return L.cross_entropy(logits, batch["labels"],
+                           valid_vocab=cfg.vocab_size)
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + single-token decode with stacked per-layer KV caches
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    length = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    one = lambda: L.cache_init(batch, length, cfg.n_kv_heads, cfg.hd,
+                               cfg.cdtype())
+    cache = {}
+    n_dense = cfg.moe.first_dense_layers if cfg.moe else cfg.n_layers
+    n_moe = cfg.n_layers - n_dense if cfg.moe else 0
+    if n_dense:
+        cache["blocks"] = jax.tree_util.tree_map(
+            lambda x: jnp.stack([x] * n_dense), one())
+    if n_moe:
+        cache["moe_blocks"] = jax.tree_util.tree_map(
+            lambda x: jnp.stack([x] * n_moe), one())
+    return cache
+
+
+def _block_decode(cfg, p, cache, x, pos, *, moe_layer: bool):
+    spec = attn_spec(cfg)
+    ring = bool(cfg.sliding_window)
+    h, new_cache = L.mha(p["attn"],
+                         L.norm_apply(x, p["ln1"], cfg.norm, cfg.norm_eps),
+                         spec, cache=cache, cache_pos=pos, ring=ring)
+    x = x + h
+    y = L.norm_apply(x, p["ln2"], cfg.norm, cfg.norm_eps)
+    if moe_layer:
+        y = moe_lib.moe_apply(p["moe"], y, cfg)
+    else:
+        y = L.mlp_apply(p["mlp"], y, cfg.mlp)
+    return x + y, new_cache
+
+
+def _scan_decode(cfg, stacked_params, stacked_cache, x, pos, *, moe_layer):
+    fwd = functools.partial(_block_decode, cfg, moe_layer=moe_layer)
+
+    def step(carry, pc):
+        p, c = pc
+        y, nc = fwd(p, c, carry, pos)
+        return y, nc
+
+    x, new_cache = jax.lax.scan(step, x, (stacked_params, stacked_cache))
+    return x, new_cache
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig):
+    """tokens: (B, 1) int32; pos: scalar int32 position. Returns (logits, cache)."""
+    x = L.embed_lookup(params["embed"], tokens, cfg.cdtype())
+    new_cache = dict(cache)
+    if "blocks" in params:
+        x, new_cache["blocks"] = _scan_decode(
+            cfg, params["blocks"], cache["blocks"], x, pos, moe_layer=False)
+    if "moe_blocks" in params:
+        x, new_cache["moe_blocks"] = _scan_decode(
+            cfg, params["moe_blocks"], cache["moe_blocks"], x, pos,
+            moe_layer=True)
+    x = L.norm_apply(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = L.lm_logits(x, head, cfg.tie_embeddings)
+    return logits, new_cache
+
+
+def _tail_kv(cfg, attn_p, ln1_p, tail_x, tail_pos, cache_len):
+    """Recompute the K/V the cache must hold from saved layer-input tails.
+
+    tail_x: (B, T, D) layer inputs at absolute positions tail_pos (T = number
+    of kept tail tokens, T <= cache_len).  Returns cache-layout (k, v, pos)
+    with ring rotation applied, padded to cache_len with empty (-1) slots.
+    """
+    spec = attn_spec(cfg)
+    B, T, _ = tail_x.shape
+    kv, hd = spec.n_kv_heads, spec.head_dim
+    attn_p = L.cast_tree(attn_p, tail_x.dtype)
+    y = L.norm_apply(tail_x, ln1_p, cfg.norm, cfg.norm_eps)
+    k = (y @ attn_p["wk"]).reshape(B, T, kv, hd)
+    v = (y @ attn_p["wv"]).reshape(B, T, kv, hd)
+    # GQA kv-head counts usually can't split over the model axis; keep the
+    # cache sequence-sharded instead (matches shd.cache_specs fallback)
+    from repro.distributed.sharding import get_active_mesh
+    mesh = get_active_mesh()
+    msize = mesh.shape.get("model", 1) if mesh is not None else 1
+    kv_spec = ((None, None, "model", None) if kv % max(msize, 1) == 0
+               else (None, "model", None, None))
+    k = shard_hint(k, kv_spec)
+    v = shard_hint(v, kv_spec)
+    if spec.qk_norm:
+        k = L.rmsnorm(k, attn_p["k_norm"], 1e-6)
+    if spec.rope_style != "none":
+        inv = L.rope_freqs(hd, spec.rope_theta, spec.rope_style)
+        k = L.apply_rope(k, jnp.broadcast_to(tail_pos, (B, T)), inv,
+                         spec.rope_style)
+    pad = cache_len - T
+    k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    pos = jnp.pad(tail_pos.astype(jnp.int32), (0, pad), constant_values=-1)
+    # ring: token at absolute position p lives in slot p % cache_len; the
+    # contiguous tail maps to a cyclic rotation of the slot axis.
+    shift = tail_pos[0] % cache_len
+    k = jnp.roll(k, shift, axis=1)
+    v = jnp.roll(v, shift, axis=1)
+    pos = jnp.roll(pos, shift, axis=0)
+    return {"k": k.astype(cfg.cdtype()), "v": v.astype(cfg.cdtype()),
+            "pos": pos}
+
+
+def prefill(params, tokens, cfg: ModelConfig, max_len: int):
+    """Process a whole prompt; returns (logits, cache).
+
+    Full-attention logits come from the cache-free forward (with the SWA mask
+    where configured).  The cache is then reconstructed from saved per-layer
+    input tails — for sliding-window models only the last ``window`` tokens
+    are kept (ring layout), so a 32k prompt needs only a 4k cache.
+    """
+    B, S = tokens.shape
+    cache_len = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    T = min(S, cache_len)
+    tail_pos = jnp.arange(S - T, S)
+    x = L.embed_lookup(params["embed"], tokens, cfg.cdtype())
+
+    new_cache = {}
+    for group, is_moe in (("blocks", False), ("moe_blocks", True)):
+        if group not in params:
+            continue
+        fwd = _remat(cfg, functools.partial(_block_fwd, cfg, moe_layer=is_moe))
+
+        def step(carry, p, fwd=fwd):
+            # build this layer's cache K/V inside the scan (one layer's
+            # intermediates live at a time; outputs stack seq-sharded)
+            kv = _tail_kv(cfg, p["attn"], p["ln1"], carry[:, S - T:, :],
+                          tail_pos, cache_len)
+            return fwd(p, carry), kv
+
+        x, new_cache[group] = jax.lax.scan(step, x, params[group])
+
+    x = L.norm_apply(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return L.lm_logits(x[:, -1:, :], head, cfg.tie_embeddings), new_cache

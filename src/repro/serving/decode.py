@@ -1,0 +1,56 @@
+"""Batched serving driver: prefill + greedy/sampled decode loop."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import Model
+
+
+@dataclasses.dataclass
+class ServeStats:
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    tokens: int = 0
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens / self.decode_s if self.decode_s else 0.0
+
+
+def generate(model: Model, params, prompts: jax.Array, *, max_new: int,
+             max_len: int, temperature: float = 0.0,
+             rng: Optional[jax.Array] = None) -> tuple[np.ndarray, ServeStats]:
+    """prompts: (B, S) int32. Greedy (temperature=0) or sampled decode."""
+    B, S = prompts.shape
+    stats = ServeStats()
+    t0 = time.perf_counter()
+    logits, cache = model.prefill(params, {"tokens": prompts}, max_len)
+    logits = logits[:, -1, :]
+    jax.block_until_ready(logits)
+    stats.prefill_s = time.perf_counter() - t0
+
+    step = jax.jit(model.decode_step, donate_argnums=1)
+    out = []
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    t0 = time.perf_counter()
+    for i in range(max_new):
+        out.append(np.asarray(tok)[:, 0])
+        logits, cache = step(params, cache, tok, jnp.int32(S + i))
+        lg = logits[:, -1, :]
+        if temperature > 0:
+            rng, k = jax.random.split(rng)
+            tok = jax.random.categorical(k, lg / temperature)[:, None]
+        else:
+            tok = jnp.argmax(lg, -1)[:, None]
+        tok = tok.astype(jnp.int32)
+    jax.block_until_ready(tok)
+    stats.decode_s = time.perf_counter() - t0
+    stats.tokens = B * max_new
+    return np.stack(out, 1), stats

@@ -1,0 +1,148 @@
+"""Optimizers from scratch (no optax offline): AdamW + Adafactor.
+
+Dtype policy: moments stored in ``opt_state_dtype`` — bf16 moments halve
+optimizer HBM for the 405B config; Adafactor's factored second moment is the
+1T (Kimi-K2) fit strategy.  All update math runs in f32 regardless of the
+storage dtype.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(tree, max_norm):
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), n
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params, tcfg: TrainConfig):
+    dt = jnp.dtype(tcfg.opt_state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params)}
+
+
+def adamw_update(grads, state, params, step, tcfg: TrainConfig):
+    b1, b2, eps = tcfg.beta1, tcfg.beta2, tcfg.eps
+    t = (step + 1).astype(jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+        mh, vh = m32 / c1, v32 / c2
+        step_ = mh / (jnp.sqrt(vh) + eps)
+        p32 = p.astype(jnp.float32)
+        p32 = p32 - tcfg.lr * (step_ + tcfg.weight_decay * p32)
+        return p32.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+    out = jax.tree_util.tree_map(upd, grads, state["m"], state["v"], params)
+    new_p = jax.tree_util.tree_map(lambda o: o[0], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree_util.tree_map(lambda o: o[1], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree_util.tree_map(lambda o: o[2], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, {"m": new_m, "v": new_v}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments; memory ~ O(rows+cols) per matrix)
+# ---------------------------------------------------------------------------
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor_init(params, tcfg: TrainConfig):
+    dt = jnp.dtype(tcfg.opt_state_dtype)
+
+    def one(p):
+        if _factored(p.shape):
+            return {"vr": jnp.zeros(p.shape[:-1], dt),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], dt)}
+        return {"v": jnp.zeros(p.shape, dt)}
+
+    return {"f": jax.tree_util.tree_map(one, params)}
+
+
+def adafactor_update(grads, state, params, step, tcfg: TrainConfig):
+    eps = 1e-30
+    d = 1.0  # clipping threshold
+    t = (step + 1).astype(jnp.float32)
+    beta2 = 1.0 - t ** -0.8  # schedule from the paper
+
+    def upd(g, st, p):
+        g32 = g.astype(jnp.float32)
+        g2 = g32 * g32 + eps
+        if "vr" in st:
+            vr = beta2 * st["vr"].astype(jnp.float32) + (1 - beta2) * g2.mean(-1)
+            vc = beta2 * st["vc"].astype(jnp.float32) + (1 - beta2) * g2.mean(-2)
+            denom = (vr[..., None] / jnp.maximum(
+                vr.mean(-1, keepdims=True)[..., None], eps)) * vc[..., None, :]
+            u = g32 * jax.lax.rsqrt(jnp.maximum(denom, eps))
+            new_st = {"vr": vr.astype(st["vr"].dtype),
+                      "vc": vc.astype(st["vc"].dtype)}
+        else:
+            v = beta2 * st["v"].astype(jnp.float32) + (1 - beta2) * g2
+            u = g32 * jax.lax.rsqrt(jnp.maximum(v, eps))
+            new_st = {"v": v.astype(st["v"].dtype)}
+        # update clipping (RMS(u) <= d)
+        rms_u = jnp.sqrt(jnp.mean(u * u) + eps)
+        u = u / jnp.maximum(1.0, rms_u / d)
+        p32 = p.astype(jnp.float32)
+        p32 = p32 - tcfg.lr * u - tcfg.lr * tcfg.weight_decay * p32
+        return p32.astype(p.dtype), new_st
+
+    # grads' array leaves stop the traversal; st arrives as the {v}/{vr,vc}
+    # subtree for that param
+    out = jax.tree_util.tree_map(upd, grads, state["f"], params)
+    istup = lambda x: isinstance(x, tuple)
+    new_p = jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=istup)
+    new_f = jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=istup)
+    return new_p, {"f": new_f}
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+def opt_init(params, tcfg: TrainConfig):
+    if tcfg.optimizer == "adamw":
+        return adamw_init(params, tcfg)
+    if tcfg.optimizer == "adafactor":
+        return adafactor_init(params, tcfg)
+    raise ValueError(tcfg.optimizer)
+
+
+def opt_update(grads, state, params, step, tcfg: TrainConfig):
+    if tcfg.max_grad_norm:
+        grads, gnorm = clip_by_global_norm(grads, tcfg.max_grad_norm)
+    else:
+        gnorm = global_norm(grads)
+    if tcfg.optimizer == "adamw":
+        p, s = adamw_update(grads, state, params, step, tcfg)
+    else:
+        p, s = adafactor_update(grads, state, params, step, tcfg)
+    return p, s, gnorm

@@ -1,0 +1,106 @@
+"""Pallas kernels vs ref.py oracles: shape/dtype sweeps (interpret=True)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import operators as O
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(7)
+HEXMAP = np.frombuffer(b"0123456789abcdef", np.uint8)
+
+
+@pytest.mark.parametrize("rows,cols", [(8, 13), (100, 26), (257, 5), (1024, 128)])
+@pytest.mark.parametrize("dtype", [np.float32])
+def test_fused_dense_sweep(rows, cols, dtype):
+    x = (RNG.normal(size=(rows, cols)) * 10).astype(dtype)
+    clamp, log = O.Clamp(0.0), O.Logarithm()
+    chain = lambda v: log.jnp_expr(clamp.jnp_expr(v))
+    fn = ops.fused_stage(chain, in_dtype=dtype, out_dtype=dtype,
+                         interpret=True)
+    got = np.asarray(fn(jnp.asarray(x)))
+    want = np.asarray(ref.fused_chain(jnp.asarray(x), chain))
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@pytest.mark.parametrize("rows,cols,width", [(64, 26, 8), (100, 3, 4), (8, 1, 8)])
+def test_fused_hex_sweep(rows, cols, width):
+    digits = RNG.integers(0, 16, size=(width, rows, cols))
+    raw = HEXMAP[digits]
+    mod = O.Modulus(4096)
+    chain = lambda v: mod.jnp_expr(ref.hex2int_digit_major(v))
+    fn = ops.fused_stage(chain, in_dtype=np.uint8, out_dtype=np.int32,
+                         hex_width=width, interpret=True)
+    got = np.asarray(fn(jnp.asarray(raw)))
+    # oracle: trailing-hex layout numpy
+    want = mod.numpy(O.Hex2Int(width).numpy(np.moveaxis(raw, 0, -1)))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("cap,parts", [(64, 1), (64, 4), (256, 8), (512, 2)])
+@pytest.mark.parametrize("n", [1, 100, 5000])
+def test_vocab_build_sweep(cap, parts, n):
+    vals = RNG.integers(0, cap, size=(n,)).astype(np.int32)
+    got = np.asarray(ops.vocab_build_chunk(jnp.asarray(vals), capacity=cap,
+                                           partitions=parts, interpret=True))
+    want = np.asarray(ref.vocab_build_chunk(jnp.asarray(vals), cap))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("rows,cols,cap,parts", [(8, 3, 64, 4), (100, 26, 128, 1),
+                                                 (33, 7, 256, 8)])
+def test_vocab_lookup_sweep(rows, cols, cap, parts):
+    vals = RNG.integers(0, cap, size=(500,)).astype(np.int32)
+    vg = O.VocabGen(cap)
+    table = vg.finalize(vg.update(vg.init_state(), vals, 0))
+    n = O.VocabGen.n_unique(table)
+    x = RNG.integers(0, cap, size=(rows, cols)).astype(np.int32)
+    got = np.asarray(ops.vocab_lookup(jnp.asarray(x), jnp.asarray(table), n,
+                                      partitions=parts, interpret=True))
+    want = np.asarray(ref.vocab_lookup(jnp.asarray(x), jnp.asarray(table), n))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("widths,out_dtype", [
+    ([13, 26], np.float32), ([1], np.float32), ([5, 7, 11], np.int32)])
+@pytest.mark.parametrize("rows", [8, 100])
+def test_packer_sweep(widths, out_dtype, rows):
+    blocks = [(RNG.normal(size=(rows, w)) * 3).astype(np.float32)
+              for w in widths]
+    pk = ops.packer(widths, [np.float32] * len(widths), out_dtype,
+                    pad_cols_to=128, interpret=True)
+    got = np.asarray(pk(*[jnp.asarray(b) for b in blocks]))
+    want = np.asarray(ref.pack_blocks([jnp.asarray(b) for b in blocks],
+                                      out_dtype, 128))
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+    assert got.shape[1] % 128 == 0
+
+
+@pytest.mark.parametrize("vocab,dim,batch,nnz,parts", [
+    (64, 16, 33, 5, 4), (128, 32, 8, 1, 1), (256, 8, 100, 7, 8)])
+def test_embedding_bag_sweep(vocab, dim, batch, nnz, parts):
+    tbl = RNG.normal(size=(vocab, dim)).astype(np.float32)
+    idx = RNG.integers(0, vocab, size=(batch, nnz)).astype(np.int32)
+    got = np.asarray(ops.embedding_bag(jnp.asarray(tbl), jnp.asarray(idx),
+                                       partitions=parts, interpret=True))
+    want = np.asarray(ref.embedding_bag(jnp.asarray(tbl), jnp.asarray(idx)))
+    # partition accumulation reorders the f32 sums
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_flash_attention_matches_dense():
+    from repro.models import layers as L
+    B, S, H, D = 2, 128, 2, 16
+    q, k, v = (jnp.asarray(RNG.normal(size=(B, S, H, D)).astype(np.float32))
+               for _ in range(3))
+    qp = kp = jnp.arange(S)
+    for causal, window in [(True, 0), (True, 32), (False, 0)]:
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(D)
+        s = s + L._mask_from_positions(qp, kp, causal, window)
+        want = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s, -1), v)
+        got = L.flash_attention(q, k, v, qp, kp, causal=causal, window=window,
+                                q_chunk=32, k_chunk=16)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5)

@@ -1,0 +1,128 @@
+"""Per-arch smoke tests (reduced configs) + serve-path consistency."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ShapeCfg
+from repro.configs.registry import ARCH_IDS, get_config, get_reduced
+from repro.models.api import build_model, cache_specs, input_specs, random_batch
+
+SHAPE = ShapeCfg("smoke", seq_len=32, global_batch=4, kind="train")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_forward_and_train_step(arch):
+    cfg = get_reduced(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = random_batch(cfg, SHAPE)
+    loss = jax.jit(model.loss)(params, batch)
+    assert np.isfinite(float(loss)), arch
+    grads = jax.grad(model.loss)(params, batch)
+    for leaf in jax.tree_util.tree_leaves(grads):
+        assert np.isfinite(np.asarray(leaf)).all(), arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_serve(arch):
+    cfg = get_reduced(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = random_batch(cfg, SHAPE)
+    sb = {k: (v[:, :16] if v.ndim == 2 else v) for k, v in batch.items()}
+    logits, cache = model.prefill(params, sb, 32)
+    assert np.isfinite(np.asarray(logits)).all(), arch
+    tok = jnp.argmax(logits[:, -1:, :], -1).astype(jnp.int32)
+    lg2, cache2 = jax.jit(model.decode_step)(params, cache, tok, jnp.int32(16))
+    assert np.isfinite(np.asarray(lg2)).all(), arch
+
+
+@pytest.mark.parametrize("arch", ["llama3_2_3b", "chatglm3_6b", "qwen3_32b",
+                                  "mamba2_370m", "zamba2_2_7b"])
+def test_prefill_decode_matches_forward(arch):
+    """prefill(16) + decode(1) logits == full forward logits at position 16."""
+    cfg = get_reduced(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(1))
+    b = random_batch(cfg, ShapeCfg("s", 33, 2, "train"), seed=5)
+    toks = b["tokens"]
+    want = np.asarray(model.forward(params, {"tokens": toks[:, :18]})[:, 16])
+    lg, cache = model.prefill(params, {"tokens": toks[:, :16]}, 33)
+    lg2, _ = model.decode_step(params, cache, toks[:, 16:17], jnp.int32(16))
+    err = np.abs(np.asarray(lg2[:, 0]) - want).max() / (np.abs(want).max() + 1e-9)
+    assert err < 1e-4, (arch, err)
+
+
+def test_moe_consistency_with_high_capacity():
+    """MoE divergence between forward and decode is ONLY capacity dropping."""
+    cfg = get_reduced("mixtral_8x7b")
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+    model = build_model(cfg)
+    params = model.init(jax.random.key(1))
+    b = random_batch(cfg, ShapeCfg("s", 33, 2, "train"), seed=5)
+    toks = b["tokens"]
+    want = np.asarray(model.forward(params, {"tokens": toks[:, :18]})[:, 16])
+    lg, cache = model.prefill(params, {"tokens": toks[:, :16]}, 33)
+    lg2, _ = model.decode_step(params, cache, toks[:, 16:17], jnp.int32(16))
+    err = np.abs(np.asarray(lg2[:, 0]) - want).max() / (np.abs(want).max() + 1e-9)
+    assert err < 1e-4, err
+
+
+def test_sliding_window_ring_cache_drops_old_tokens():
+    """With a ring cache, tokens beyond the window no longer affect logits."""
+    cfg = get_reduced("mixtral_8x7b")  # window 16
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+    model = build_model(cfg)
+    params = model.init(jax.random.key(2))
+    b = random_batch(cfg, ShapeCfg("s", 64, 1, "train"), seed=6)
+    toks = np.asarray(b["tokens"])
+    # two prompts differing ONLY at position 0, decoded at position 40:
+    toks2 = toks.copy()
+    toks2[:, 0] = (toks2[:, 0] + 1) % cfg.vocab_size
+    outs = []
+    for t in (toks, toks2):
+        lg, cache = model.prefill(params, {"tokens": jnp.asarray(t[:, :40])},
+                                  64)
+        lg2, _ = model.decode_step(params, cache,
+                                   jnp.asarray(t[:, 40:41]), jnp.int32(40))
+        outs.append(np.asarray(lg2))
+    np.testing.assert_allclose(outs[0], outs[1], atol=1e-5)
+
+
+def test_input_specs_cover_full_configs():
+    from repro.configs.base import ALL_SHAPES
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in ALL_SHAPES:
+            specs = input_specs(cfg, shape)
+            assert "tokens" in specs or "frames" in specs
+            for s in specs.values():
+                assert isinstance(s, jax.ShapeDtypeStruct)
+
+
+def test_param_counts_close_to_nominal():
+    """Analytic param_count ~ actual init sizes (reduced configs)."""
+    for arch in ["llama3_2_3b", "mamba2_370m", "mixtral_8x7b"]:
+        cfg = get_reduced(arch)
+        model = build_model(cfg)
+        shapes = jax.eval_shape(model.init, jax.random.key(0))
+        actual = sum(np.prod(s.shape) for s in jax.tree_util.tree_leaves(shapes))
+        nominal = cfg.param_count()
+        # padded vocab + norm scales make actual slightly larger
+        assert 0.7 < actual / nominal < 1.6, (arch, actual, nominal)
+
+
+def test_full_config_param_counts():
+    """Full configs match public parameter counts within tolerance."""
+    expect = {"llama3_405b": 405e9, "qwen3_32b": 32.8e9,
+              "mixtral_8x7b": 46.7e9, "kimi_k2": 1.04e12,
+              "llama3_2_3b": 3.2e9}
+    for arch, n in expect.items():
+        got = get_config(arch).param_count()
+        assert 0.8 < got / n < 1.25, (arch, got, n)

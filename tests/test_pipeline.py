@@ -1,0 +1,155 @@
+"""Pipeline compiler: backend equality, planner fusion, semantics, packing."""
+
+import numpy as np
+import pytest
+
+from repro.core import operators as O
+from repro.core.dag import Vocab
+from repro.core.pipeline import Pipeline, lm_token_pipeline, paper_pipeline
+from repro.core.planner import FusedStage, VocabLookupStage
+from repro.core.schema import Schema
+from repro.core.semantics import BatchingPolicy, OrderingPolicy
+from repro.data import synth
+
+
+def _fit_batches():
+    return synth.dataset_batches("I", rows=3000, batch_size=1000, seed=7)
+
+
+@pytest.fixture(scope="module")
+def raw_batch():
+    return next(synth.dataset_batches("I", rows=600, batch_size=600, seed=9))
+
+
+@pytest.mark.parametrize("which", ["I", "II", "III"])
+def test_backend_equality(which, raw_batch):
+    outs = {}
+    for backend in ["numpy", "jnp", "pallas"]:
+        p = paper_pipeline(which, modulus=4096, small_vocab=2048,
+                           large_vocab=8192).compile(backend=backend)
+        p.fit(_fit_batches())
+        outs[backend] = {k: np.asarray(v) for k, v in p(raw_batch).items()}
+    for k in outs["numpy"]:
+        np.testing.assert_allclose(outs["numpy"][k], outs["jnp"][k],
+                                   rtol=1e-5, err_msg=f"{which}/{k}")
+        np.testing.assert_allclose(outs["numpy"][k], outs["pallas"][k],
+                                   rtol=1e-5, err_msg=f"{which}/{k}")
+
+
+def test_planner_fuses_stateless_chain():
+    p = paper_pipeline("II", small_vocab=512)
+    compiled = p.compile(backend="jnp")
+    plan = compiled.plan
+    fused = [s for s in plan.stages if isinstance(s, FusedStage)]
+    # dense chain (FillMissing|Clamp|Log) fused into ONE stage; sparse chain
+    # (Hex2Int|Modulus) fused into ONE stage feeding the vocab
+    assert len(fused) == 2
+    assert [op.name for op in fused[0].ops] == ["FillMissing", "Clamp",
+                                                "Logarithm"]
+    assert [op.name for op in fused[1].ops] == ["Hex2Int", "Modulus"]
+    lookups = [s for s in plan.stages if isinstance(s, VocabLookupStage)]
+    assert len(lookups) == 1 and lookups[0].placement == "vmem"
+
+
+def test_planner_state_placement_hbm():
+    p = paper_pipeline("III", large_vocab=2 ** 21)  # 8 MiB table > 4 MiB
+    plan = p.compile(backend="jnp").plan
+    lookups = [s for s in plan.stages if isinstance(s, VocabLookupStage)]
+    assert lookups[0].placement == "hbm"
+
+
+def test_fit_before_apply_oov(raw_batch):
+    """Unfitted pipeline maps every value to OOV index 0 (n_unique == 0)."""
+    p = paper_pipeline("II", small_vocab=512).compile(backend="jnp")
+    out = p(raw_batch)
+    assert int(np.asarray(out["sparse"]).max()) == 0
+
+
+def test_vocab_version_increments():
+    p = paper_pipeline("II", small_vocab=512).compile(backend="jnp")
+    assert p.state.version == 0
+    p.fit(_fit_batches())
+    assert p.state.version == 1
+    p.fit(_fit_batches())
+    assert p.state.version == 2  # point-in-time correctness bookkeeping
+
+
+def test_pack_shapes_aligned(raw_batch):
+    p = paper_pipeline("I", modulus=4096).compile(backend="jnp")
+    out = p(raw_batch)
+    assert np.asarray(out["dense"]).shape == (600, 16)  # 13 -> pad 16
+    assert np.asarray(out["sparse"]).shape == (600, 32)  # 26 -> pad 32
+    assert np.asarray(out["label"]).shape == (600,)
+    assert np.asarray(out["dense"]).dtype == np.float32
+    assert np.asarray(out["sparse"]).dtype == np.int32
+
+
+def test_cross_feature():
+    schema = Schema.criteo_kaggle()
+    p = Pipeline(schema)
+    a = p.sparse("sparse_0") | O.Hex2Int(8) | O.Modulus(128)
+    b = p.sparse("sparse_1") | O.Hex2Int(8) | O.Modulus(128)
+    x = p.cross(a, b, m=997)
+    p.output("crossed", [x], dtype=np.int32)
+    compiled = p.compile(backend="jnp")
+    raw = next(synth.dataset_batches("I", rows=100, batch_size=100))
+    out = np.asarray(compiled(raw)["crossed"])
+    assert out.min() >= 0 and out.max() < 997
+    # numpy backend agrees
+    comp2 = Pipeline.__new__(Pipeline)  # fresh graph needed; rebuild
+    p2 = Pipeline(schema)
+    a2 = p2.sparse("sparse_0") | O.Hex2Int(8) | O.Modulus(128)
+    b2 = p2.sparse("sparse_1") | O.Hex2Int(8) | O.Modulus(128)
+    p2.output("crossed", [p2.cross(a2, b2, m=997)], dtype=np.int32)
+    out2 = np.asarray(p2.compile(backend="numpy")(raw)["crossed"])
+    np.testing.assert_array_equal(out[:, :1], out2[:, :1])
+
+
+def test_lm_token_pipeline_bounds_vocab():
+    p = lm_token_pipeline(seq_len=64, vocab_size=1000).compile(backend="jnp")
+    raw = next(synth.lm_event_batches(64, rows=32, batch_size=32))
+    out = p(raw)
+    toks = np.asarray(out["tokens"])
+    assert toks.shape == (32, 64) and toks.max() < 1000 and toks.min() >= 0
+
+
+def test_semantics_validation():
+    with pytest.raises(ValueError):
+        BatchingPolicy(0)
+    with pytest.raises(ValueError):
+        OrderingPolicy("fifo", reorder_window=4)
+
+
+def test_schema_validation_catches_bad_batch():
+    schema = Schema.criteo_kaggle()
+    batch = next(synth.dataset_batches("I", rows=10, batch_size=10))
+    schema.validate_batch(batch)  # ok
+    bad = dict(batch)
+    bad["dense_0"] = bad["dense_0"].astype(np.float64)
+    with pytest.raises(TypeError):
+        schema.validate_batch(bad)
+
+
+def test_resource_summary():
+    p = paper_pipeline("III", large_vocab=2 ** 19).compile(backend="jnp")
+    rs = p.resource_summary()
+    assert rs["n_vocabs"] == 1
+    assert rs["hbm_table_bytes"] == 4 * 2 ** 19 or rs["vmem_table_bytes"] > 0
+    assert rs["flops_per_row"] > 0
+
+
+def test_frequency_filter_backend_equality(raw_batch):
+    """Pipeline II with min_count=3: rare ids -> OOV, all backends agree."""
+    outs = {}
+    n_uniq = {}
+    for backend in ["numpy", "jnp", "pallas"]:
+        p = paper_pipeline("II", small_vocab=2048,
+                           min_count=3).compile(backend=backend)
+        p.fit(_fit_batches())
+        outs[backend] = np.asarray(p(raw_batch)["sparse"])
+        n_uniq[backend] = max(p.state.n_unique.values())
+    p1 = paper_pipeline("II", small_vocab=2048).compile(backend="numpy")
+    p1.fit(_fit_batches())
+    assert n_uniq["numpy"] < max(p1.state.n_unique.values())  # filter bites
+    np.testing.assert_array_equal(outs["numpy"], outs["jnp"])
+    np.testing.assert_array_equal(outs["numpy"], outs["pallas"])

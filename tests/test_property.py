@@ -1,0 +1,112 @@
+"""Hypothesis property tests on system invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import operators as O
+from repro.core.pipeline import Pipeline, paper_pipeline
+from repro.core.schema import Schema
+from repro.data import synth
+from repro.kernels import ops, ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@given(st.lists(st.integers(0, 63), min_size=1, max_size=200))
+def test_vocab_bijection_and_order(vals):
+    """Table maps the set of seen values bijectively onto [0, n_unique),
+    ordered by first appearance."""
+    arr = np.array(vals, np.int32)
+    vg = O.VocabGen(64)
+    table = vg.finalize(vg.update(vg.init_state(), arr, 0))
+    seen_in_order = list(dict.fromkeys(vals))
+    n = O.VocabGen.n_unique(table)
+    assert n == len(seen_in_order)
+    ranks = [int(table[v]) for v in seen_in_order]
+    assert ranks == list(range(n))  # first-appearance order
+    assert set(np.asarray(table[table >= 0])) == set(range(n))  # bijection
+
+
+@given(st.lists(st.integers(0, 31), min_size=1, max_size=150),
+       st.integers(1, 3))
+def test_vocab_streaming_equals_batch(vals, n_chunks):
+    """Chunked streaming fit == single-shot fit (any chunking)."""
+    arr = np.array(vals, np.int32)
+    vg = O.VocabGen(32)
+    want = vg.finalize(vg.update(vg.init_state(), arr, 0))
+    state = ref.vocab_state_init(32)
+    for ci, chunk in enumerate(np.array_split(arr, n_chunks)):
+        fp = ref.vocab_build_chunk(jnp.asarray(chunk.astype(np.int32)), 32)
+        state = ref.vocab_merge(state, fp, ci)
+    got = np.asarray(ref.vocab_finalize(state))
+    np.testing.assert_array_equal(got, want)
+
+
+@given(st.integers(-2 ** 31, 2 ** 31 - 1), st.integers(1, 2 ** 20))
+def test_modulus_in_range(x, m):
+    out = O.Modulus(m).numpy(np.array([x], np.int32))[0]
+    assert 0 <= out < m
+
+
+@given(st.lists(st.floats(-1e6, 1e6, allow_nan=False), min_size=1,
+                max_size=50))
+def test_clamp_idempotent(xs):
+    op = O.Clamp(0.0, 100.0)
+    x = np.array(xs, np.float32)
+    once = op.numpy(x)
+    np.testing.assert_array_equal(op.numpy(once), once)
+
+
+@given(st.integers(0, 2 ** 32 - 1), st.integers(2, 2 ** 16))
+def test_sigrid_hash_stable_and_bounded(x, m):
+    op = O.SigridHash(m)
+    a = op.numpy(np.array([x], np.uint32))[0]
+    b = op.numpy(np.array([x], np.uint32))[0]
+    assert a == b and 0 <= a < m
+
+
+@given(st.integers(1, 30), st.integers(1, 5))
+def test_packer_roundtrip(rows, nblocks):
+    """unpack(pack(blocks)) == blocks (the packer loses nothing)."""
+    rng = np.random.default_rng(rows * 31 + nblocks)
+    widths = list(rng.integers(1, 9, size=nblocks))
+    blocks = [rng.normal(size=(rows, w)).astype(np.float32) for w in widths]
+    packed = np.asarray(ref.pack_blocks([jnp.asarray(b) for b in blocks],
+                                        np.float32, 128))
+    ofs = 0
+    for b, w in zip(blocks, widths):
+        np.testing.assert_allclose(packed[:, ofs:ofs + w], b, rtol=1e-6)
+        ofs += w
+    assert np.all(packed[:, ofs:] == 0)  # padding is zeros
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+def test_hex_encode_decode_roundtrip(v):
+    """synth hex encoder -> Hex2Int is the identity on [0, 2^31)."""
+    enc = synth._hex_encode(np.array([v], np.uint32), 8)
+    out = O.Hex2Int(8).numpy(enc.reshape(1, 1, 8))[0, 0]
+    # note: v=0 encodes to ASCII "00000000" (0x30 bytes) which decodes to 0;
+    # the MISSING sentinel is all-NUL (0x00) bytes, a distinct encoding
+    assert out == v
+
+
+@given(st.integers(2, 64))
+def test_fused_equals_composition(seed):
+    """Compiled fused stage == composing individual operator oracles."""
+    rng = np.random.default_rng(seed)
+    x = (rng.normal(size=(17, 5)) * 20).astype(np.float32)
+    p = Pipeline(Schema([*Schema.criteo_kaggle()][:6]))  # label + 5 dense
+    d = (p.dense("dense_*") | O.FillMissing(0.0) | O.Clamp(0.0, 50.0)
+         | O.Logarithm() | O.Bucketize([0.5, 1.5, 3.0]))
+    p.output("out", [d], dtype=np.int32)
+    comp = p.compile(backend="jnp")
+    raw = {"label": np.zeros(17, np.float32)}
+    for i in range(5):
+        raw[f"dense_{i}"] = x[:, i]
+    got = np.asarray(comp(raw)["out"])
+    want = O.Bucketize([0.5, 1.5, 3.0]).numpy(
+        O.Logarithm().numpy(O.Clamp(0.0, 50.0).numpy(
+            O.FillMissing(0.0).numpy(x))))
+    np.testing.assert_array_equal(got[:, :5], want)
