@@ -67,7 +67,12 @@ def main():
           f"({rows/wall:,.0f} rows/s)")
     print(f"[e2e] trainer utilization {s.trainer_utilization(train_s):.1%} "
           f"(trainer starved {s.consumer_wait_s:.2f}s; "
-          f"ETL blocked on credits {s.producer_wait_s:.2f}s)")
+          f"ETL blocked on credits {s.producer_wait_s:.2f}s; "
+          f"ETL hidden behind training {s.overlapped_etl_s:.2f}s)")
+    for name, st in s.stage_breakdown().items():
+        print(f"[e2e]   stage {name:9s} items={st['items']:<5d} "
+              f"busy={st['busy_s']:.2f}s wait_in={st['wait_in_s']:.2f}s "
+              f"wait_out={st['wait_out_s']:.2f}s occ={st['occupancy']:.1%}")
 
 
 if __name__ == "__main__":

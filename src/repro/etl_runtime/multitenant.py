@@ -4,20 +4,32 @@ PipeRec hosts up to 7 heterogeneous pipelines in FPGA dynamic regions via
 partial reconfiguration.  The TPU/JAX analogue: each tenant is an
 independently compiled executable (jit cache entry); "reconfiguration within
 milliseconds" is swapping which executables are active — no recompilation, the
-lowered artifact is reused.  Tenants share the device; XLA serializes device
-work per stream while host-side ETL assembly threads run concurrently, so
-aggregate throughput scales until the device (or host ingest) saturates —
-mirroring Fig 17 where scaling is linear until NIC/PCIe bandwidth binds.
+lowered artifact is reused.
+
+Scheduling is a **weighted-credit policy over the staged executor** (not a
+parallel code path): every tenant runs the same read → transform → place →
+deliver machinery from ``etl_runtime.runtime``, and the shared staging-buffer
+budget (``total_credits``) is split between tenants proportionally to their
+weights.  A tenant's credit share bounds its in-flight batches, so a heavy
+tenant cannot crowd the staging memory of a light one — the FPGA dynamic-
+region partitioning, expressed as queue capacity.  Tenants share the device;
+XLA serializes device work per stream while host-side stages run
+concurrently, so aggregate throughput scales until the device (or host
+ingest) saturates — mirroring Fig 17 where scaling is linear until NIC/PCIe
+bandwidth binds.
 """
 
 from __future__ import annotations
 
+import itertools
 import threading
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Iterator
 
 import numpy as np
+
+from repro.etl_runtime.runtime import StreamingExecutor
 
 
 @dataclass
@@ -26,6 +38,9 @@ class TenantResult:
     batches: int = 0
     rows: int = 0
     seconds: float = 0.0
+    weight: float = 1.0
+    credits: int = 1
+    stage_breakdown: dict = field(default_factory=dict)
 
     @property
     def rows_per_s(self) -> float:
@@ -34,45 +49,80 @@ class TenantResult:
 
 @dataclass
 class PipelineManager:
-    """Run N compiled pipelines concurrently; report per-tenant throughput."""
+    """Run N compiled pipelines concurrently under a shared credit budget."""
 
     tenants: dict = field(default_factory=dict)
+    weights: dict = field(default_factory=dict)
+    total_credits: int = 8
 
-    def add(self, name: str, pipeline, source_factory: Callable[[], Iterator[dict]]):
+    def add(self, name: str, pipeline,
+            source_factory: Callable[[], Iterator[dict]], *,
+            weight: float = 1.0):
         if name in self.tenants:
             raise ValueError(f"tenant {name!r} already registered")
+        if weight <= 0:
+            raise ValueError("tenant weight must be positive")
         self.tenants[name] = (pipeline, source_factory)
+        self.weights[name] = float(weight)
 
     def swap(self, name: str, pipeline, source_factory) -> None:
         """Partial-reconfiguration analogue: replace a tenant's pipeline.
 
-        The new pipeline must already be compiled; the swap itself is O(1).
+        The new pipeline must already be compiled; the swap itself is O(1)
+        and keeps the tenant's weight.
         """
         if name not in self.tenants:
             raise KeyError(name)
         self.tenants[name] = (pipeline, source_factory)
 
+    def credit_allocation(self) -> dict[str, int]:
+        """Weighted split of the staging-credit budget (each tenant ≥ 1).
+
+        Largest-remainder apportionment so the shares actually sum to
+        ``total_credits`` (never oversubscribing the staging budget), except
+        when there are more tenants than credits — then the ≥ 1 floor wins.
+        """
+        if not self.tenants:
+            return {}
+        total_w = sum(self.weights[n] for n in self.tenants)
+        exact = {n: self.total_credits * self.weights[n] / total_w
+                 for n in self.tenants}
+        alloc = {n: max(1, int(exact[n])) for n in self.tenants}
+        leftover = self.total_credits - sum(alloc.values())
+        for n in sorted(self.tenants, key=lambda n: exact[n] - int(exact[n]),
+                        reverse=True):
+            if leftover <= 0:
+                break
+            alloc[n] += 1
+            leftover -= 1
+        return alloc
+
     def run(self, n_batches: int) -> dict[str, TenantResult]:
-        results = {n: TenantResult(n) for n in self.tenants}
+        alloc = self.credit_allocation()
+        results = {n: TenantResult(n, weight=self.weights[n],
+                                   credits=alloc[n])
+                   for n in self.tenants}
         errors: list = []
 
         def worker(name, pipeline, source_factory):
+            ex = StreamingExecutor(pipeline, source_factory(),
+                                   credits=alloc[name])
             try:
                 t0 = time.perf_counter()
-                src = source_factory()
-                for i, raw in enumerate(src):
-                    if i >= n_batches:
-                        break
-                    out = pipeline(raw)
+                for out in itertools.islice(ex, n_batches):
                     # block so throughput numbers are honest
                     for v in out.values():
                         if hasattr(v, "block_until_ready"):
                             v.block_until_ready()
                     results[name].batches += 1
-                    results[name].rows += int(np.shape(next(iter(out.values())))[0])
+                    results[name].rows += int(
+                        np.shape(next(iter(out.values())))[0])
                 results[name].seconds = time.perf_counter() - t0
+                results[name].stage_breakdown = ex.stats.stage_breakdown()
             except Exception as e:  # pragma: no cover
                 errors.append((name, e))
+            finally:
+                ex.stop()
 
         threads = [threading.Thread(target=worker, args=(n, p, s), daemon=True)
                    for n, (p, s) in self.tenants.items()]

@@ -1,35 +1,149 @@
-"""Co-scheduling streaming runtime: overlap ETL with training (paper §3, Fig 3/8).
+"""Staged prefetching executor: overlap ETL with training (paper §3, Fig 3/8).
 
-Structure (double buffering + explicit credit backpressure):
+The pipeline is an explicit chain of stages connected by credit-bounded,
+stop-aware queues (the paper's GPU staging buffers):
 
-  reader thread --raw--> ETL producer thread --packed--> credit queue --> trainer
-                                                        (capacity = credits)
+  read ──raw──▶ transform ──packed──▶ place ──ready──▶ deliver (trainer)
+       credits              credits            credits
 
-- The producer runs the compiled apply-program for batch i+1 while the trainer
-  consumes batch i.  JAX async dispatch means the producer enqueues device
-  futures; real compute overlaps the trainer's step.
-- Backpressure: the queue holds at most ``credits`` batches (the paper's GPU
-  staging buffers); the producer blocks when credits are exhausted, rate-
-  matching ETL to trainer consumption exactly as the FPGA write path does.
-- Freshness: with FreshnessPolicy.online, batches that would exceed the
-  staleness bound are dropped (oldest first) instead of delaying fresh data.
-- Straggler mitigation: a reader thread pulls raw batches with a timeout; a
-  slow source read is skipped and back-filled from the next shard, so one slow
-  storage node cannot stall the whole pipeline (the 1000-node posture: this is
-  per-host, and hosts are independent).
+- **read** pulls raw batches from the source iterator.  A source stall beyond
+  ``read_timeout_s`` is detected downstream and counted as a straggler skip,
+  so one slow storage node cannot stall the whole pipeline (the 1000-node
+  posture: this is per-host, and hosts are independent).
+- **transform** dispatches the jitted apply-program.  JAX async dispatch means
+  the stage enqueues *device futures* — no host materialization, no
+  ``block_until_ready`` — so real ETL compute overlaps the trainer's step.
+- **place** double-buffers the H2D/layout transfer: with a trainer
+  ``NamedSharding`` (see ``etl_runtime/transfer.py``) batches are
+  ``device_put`` with the exact layout ``train_step`` declares in
+  ``in_shardings``, so delivered batches are donation-ready and H2D overlaps
+  device compute.  The ready queue holds ``credits`` batches — one being
+  consumed, the rest in flight (double buffering at credits=2).
+- **deliver** is the consumer side (``__iter__`` / ``get_batch``); it records
+  trainer starvation time.
+
+Backpressure: each queue holds at most ``credits`` items and every stage
+blocks when its output queue is full, rate-matching ETL to trainer
+consumption exactly as the FPGA write path does.
+
+Freshness: with ``FreshnessPolicy.online``, a full ready queue sheds its
+*oldest* queued batch to admit the fresh one (time-to-freshness over
+completeness); drops are counted in ``stats.dropped_stale``.
+
+Shutdown: ``stop()`` is prompt — queues are stop-aware (no unconditional
+blocking puts), so a full queue can never deadlock stage teardown.
+
+Every stage records busy / wait-in / wait-out time (``stats.stages``), giving
+the paper's Fig-8-style per-stage breakdown consumed by
+``benchmarks/bench_overlap.py``.
 """
 
 from __future__ import annotations
 
+import collections
 import queue
 import threading
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Iterator, Optional
 
-import jax
-
 from repro.core.semantics import PipelineSemantics
+from repro.etl_runtime import transfer as transfer_lib
+
+
+class _EOS:
+    """End-of-stream marker forwarded through every queue."""
+
+
+class _STOPPED:
+    """Returned by queue ops when the executor is stopping."""
+
+
+class CreditQueue:
+    """Bounded FIFO whose put/get respect a shared stop event.
+
+    Unlike ``queue.Queue``, a producer can never deadlock on a full queue
+    during shutdown: both ends poll the stop event and return ``_STOPPED``.
+    ``put(drop_oldest=True)`` implements the freshness policy — a full queue
+    sheds its oldest entry to admit the new one (oldest-first drop).
+    """
+
+    def __init__(self, capacity: int, stop: threading.Event, name: str = ""):
+        self.capacity = max(1, capacity)
+        self.name = name
+        self._dq: collections.deque = collections.deque()
+        self._cv = threading.Condition()
+        self._stop = stop
+
+    def __len__(self) -> int:
+        with self._cv:
+            return len(self._dq)
+
+    def wake(self) -> None:
+        with self._cv:
+            self._cv.notify_all()
+
+    def put(self, item, *, drop_oldest: bool = False):
+        """Block until enqueued. Returns the number of entries dropped to
+        make room (0 normally), or ``_STOPPED`` if the executor stopped."""
+        dropped = 0
+        with self._cv:
+            while len(self._dq) >= self.capacity:
+                if self._stop.is_set():
+                    return _STOPPED
+                if drop_oldest:
+                    self._dq.popleft()
+                    dropped += 1
+                    break
+                # every transition notifies under this lock and stop() wakes
+                # all queues, so an untimed wait cannot miss a wakeup
+                self._cv.wait()
+            if self._stop.is_set():
+                return _STOPPED
+            self._dq.append(item)
+            self._cv.notify_all()
+        return dropped
+
+    def get(self, timeout: Optional[float] = None):
+        """Block until an item is available. Raises ``queue.Empty`` on
+        timeout; returns ``_STOPPED`` if the executor stopped."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            while True:
+                # stop takes precedence over draining: shutdown is prompt
+                if self._stop.is_set():
+                    return _STOPPED
+                if self._dq:
+                    break
+                if deadline is not None:
+                    rem = deadline - time.monotonic()
+                    if rem <= 0:
+                        raise queue.Empty
+                    self._cv.wait(rem)
+                else:
+                    self._cv.wait()
+            item = self._dq.popleft()
+            self._cv.notify_all()
+            return item
+
+
+@dataclass
+class StageStats:
+    """Per-stage occupancy accounting (paper Fig 8 breakdown)."""
+    name: str
+    items: int = 0
+    busy_s: float = 0.0       # time spent doing the stage's own work
+    wait_in_s: float = 0.0    # blocked waiting for upstream input
+    wait_out_s: float = 0.0   # blocked on downstream credits (backpressure)
+
+    def occupancy(self) -> float:
+        total = self.busy_s + self.wait_in_s + self.wait_out_s
+        return self.busy_s / total if total > 0 else 0.0
+
+    def as_dict(self) -> dict:
+        return {"items": self.items, "busy_s": self.busy_s,
+                "wait_in_s": self.wait_in_s, "wait_out_s": self.wait_out_s,
+                "occupancy": self.occupancy()}
 
 
 @dataclass
@@ -38,130 +152,240 @@ class RuntimeStats:
     consumed: int = 0
     dropped_stale: int = 0
     skipped_straggler: int = 0
-    producer_wait_s: float = 0.0   # time blocked on credits (ETL faster)
     consumer_wait_s: float = 0.0   # time trainer starved (ETL slower)
-    etl_time_s: float = 0.0
     epoch_marks: list = field(default_factory=list)
+    stages: dict = field(default_factory=dict)  # name -> StageStats
+
+    # -- compatibility views over the per-stage accounting ----------------
+
+    @property
+    def etl_time_s(self) -> float:
+        """Total ETL work time (transform dispatch + placement)."""
+        return sum(s.busy_s for n, s in self.stages.items()
+                   if n in ("transform", "place"))
+
+    @property
+    def producer_wait_s(self) -> float:
+        """Time the producer side blocked on credits (ETL faster)."""
+        return sum(s.wait_out_s for s in self.stages.values())
+
+    @property
+    def overlapped_etl_s(self) -> float:
+        """ETL work hidden behind training: busy time the trainer did not
+        pay for as starvation.  > 0 is the measured overlap win."""
+        return max(0.0, self.etl_time_s - self.consumer_wait_s)
 
     def trainer_utilization(self, total_train_s: float) -> float:
         denom = total_train_s + self.consumer_wait_s
         return total_train_s / denom if denom > 0 else 1.0
 
+    def stage_breakdown(self) -> dict:
+        """Fig-8-style per-stage breakdown: {stage: {items, busy_s, ...}}."""
+        return {name: s.as_dict() for name, s in self.stages.items()}
 
-class _SENTINEL:
-    pass
+
+class _Stage(threading.Thread):
+    """One pipeline stage: pull → work → push, with full time accounting.
+
+    ``fn(item)`` returns the transformed item.  EOS is forwarded and the
+    stage exits; a stop event aborts promptly even mid-put (CreditQueue is
+    stop-aware, so a full downstream queue cannot deadlock teardown).
+    """
+
+    def __init__(self, stats: StageStats, fn: Callable, in_q: CreditQueue,
+                 out_q: CreditQueue, *, drop_oldest: bool = False,
+                 in_timeout_s: Optional[float] = None,
+                 on_in_timeout: Optional[Callable[[], None]] = None,
+                 on_put: Optional[Callable[[int], None]] = None):
+        super().__init__(name=f"etl-{stats.name}", daemon=True)
+        self.stats = stats
+        self.fn = fn
+        self.in_q = in_q
+        self.out_q = out_q
+        self.drop_oldest = drop_oldest
+        self.in_timeout_s = in_timeout_s
+        self.on_in_timeout = on_in_timeout
+        self.on_put = on_put
+
+    def run(self):
+        while True:
+            t0 = time.perf_counter()
+            try:
+                item = self.in_q.get(timeout=self.in_timeout_s)
+            except queue.Empty:
+                self.stats.wait_in_s += time.perf_counter() - t0
+                if self.on_in_timeout:
+                    self.on_in_timeout()
+                continue
+            self.stats.wait_in_s += time.perf_counter() - t0
+            if item is _STOPPED:
+                return
+            if item is _EOS:
+                self.out_q.put(_EOS)
+                return
+            t1 = time.perf_counter()
+            out = self.fn(item)
+            self.stats.busy_s += time.perf_counter() - t1
+            t2 = time.perf_counter()
+            r = self.out_q.put(out, drop_oldest=self.drop_oldest)
+            self.stats.wait_out_s += time.perf_counter() - t2
+            if r is _STOPPED:
+                return
+            self.stats.items += 1
+            if self.on_put:
+                self.on_put(r)
 
 
 class StreamingExecutor:
-    """Producer/consumer bridge between a CompiledPipeline and a trainer."""
+    """Staged prefetching bridge between a CompiledPipeline and a trainer.
+
+    Parameters
+    ----------
+    pipeline : compiled apply-program, called as ``pipeline(raw) -> packed``.
+    source : iterator of raw columnar batches.
+    semantics : optional PipelineSemantics; ``freshness.online`` enables
+        oldest-first shedding at the ready queue.
+    credits : staging-buffer depth per queue (2 = double buffering).
+    place : optional explicit placement hook ``packed -> ready``; overrides
+        ``sharding``/``mesh``.
+    sharding : optional ``NamedSharding`` for the place stage (the trainer's
+        batch sharding — delivered batches are donation-ready).
+    mesh : optional ``Mesh``; shorthand for
+        ``sharding=transfer.batch_sharding(mesh)``.
+    read_timeout_s : straggler bound on the raw queue; a stall beyond this is
+        skipped (counted), not fatal.
+    """
 
     def __init__(self, pipeline, source: Iterator[dict], *,
                  semantics: Optional[PipelineSemantics] = None,
                  credits: int = 2,
                  place: Optional[Callable[[dict], dict]] = None,
+                 sharding=None, mesh=None,
                  read_timeout_s: float = 30.0):
         self.pipeline = pipeline
         self.semantics = semantics or getattr(pipeline, "semantics", None)
         self.credits = max(1, credits)
-        self.place = place or (lambda b: b)
         self.read_timeout_s = read_timeout_s
-        self.stats = RuntimeStats()
-        self._raw_q: queue.Queue = queue.Queue(maxsize=self.credits + 1)
-        self._packed_q: queue.Queue = queue.Queue(maxsize=self.credits)
-        self._stop = threading.Event()
+        if place is None:
+            if sharding is None and mesh is not None:
+                sharding = transfer_lib.batch_sharding(mesh)
+            if sharding is not None:
+                place = lambda b: transfer_lib.put_packed(b, sharding)
+            else:
+                place = lambda b: b
+        self.place = place
         self._source = source
-        self._reader = threading.Thread(target=self._read_loop, daemon=True)
-        self._producer = threading.Thread(target=self._produce_loop, daemon=True)
+        self._stop = threading.Event()
+        self.stats = RuntimeStats()
+        for name in ("read", "transform", "place", "deliver"):
+            self.stats.stages[name] = StageStats(name)
+
+        fresh = bool(self.semantics and self.semantics.freshness.online)
+        self._raw_q = CreditQueue(self.credits, self._stop, "raw")
+        self._packed_q = CreditQueue(self.credits, self._stop, "packed")
+        self._ready_q = CreditQueue(self.credits, self._stop, "ready")
+
+        def _on_straggler():
+            self.stats.skipped_straggler += 1
+
+        def _on_delivered(dropped: int):
+            self.stats.produced += 1
+            self.stats.dropped_stale += dropped
+
+        self._stages = [
+            _Stage(self.stats.stages["transform"], self.pipeline,
+                   self._raw_q, self._packed_q,
+                   in_timeout_s=self.read_timeout_s,
+                   on_in_timeout=_on_straggler),
+            _Stage(self.stats.stages["place"], self.place,
+                   self._packed_q, self._ready_q,
+                   drop_oldest=fresh, on_put=_on_delivered),
+        ]
+        self._reader = threading.Thread(target=self._read_loop,
+                                        name="etl-read", daemon=True)
         self._started = False
 
-    # ---- threads ------------------------------------------------------
+    # ---- read stage (source iterators don't fit the queue-in shape) ------
 
     def _read_loop(self):
+        st = self.stats.stages["read"]
         try:
-            for raw in self._source:
-                if self._stop.is_set():
-                    return
-                while not self._stop.is_set():
-                    try:
-                        self._raw_q.put(raw, timeout=0.1)
-                        break
-                    except queue.Full:
-                        continue
-        finally:
-            self._raw_q.put(_SENTINEL)
-
-    def _produce_loop(self):
-        while not self._stop.is_set():
-            t0 = time.perf_counter()
-            try:
-                raw = self._raw_q.get(timeout=self.read_timeout_s)
-            except queue.Empty:
-                # straggler: source stalled beyond timeout; skip this slot
-                self.stats.skipped_straggler += 1
-                continue
-            if raw is _SENTINEL:
-                self._packed_q.put(_SENTINEL)
-                return
-            t1 = time.perf_counter()
-            packed = self.place(self.pipeline(raw))
-            # force async dispatch to start (non-blocking)
-            jax.tree_util.tree_map(
-                lambda x: getattr(x, "block_until_ready", lambda: x) and x,
-                packed)
-            t2 = time.perf_counter()
-            self.stats.etl_time_s += t2 - t1
-            w0 = time.perf_counter()
+            it = iter(self._source)
             while not self._stop.is_set():
+                t0 = time.perf_counter()
                 try:
-                    self._packed_q.put((packed, time.monotonic()), timeout=0.1)
+                    raw = next(it)
+                except StopIteration:
                     break
-                except queue.Full:
-                    fresh = self.semantics and self.semantics.freshness.online
-                    if fresh:
-                        # drop the stalest queued batch to keep data fresh
-                        try:
-                            self._packed_q.get_nowait()
-                            self.stats.dropped_stale += 1
-                        except queue.Empty:
-                            pass
-                    continue
-            self.stats.producer_wait_s += time.perf_counter() - w0
-            self.stats.produced += 1
-            del t0
+                st.busy_s += time.perf_counter() - t0
+                t1 = time.perf_counter()
+                r = self._raw_q.put(raw)
+                st.wait_out_s += time.perf_counter() - t1
+                if r is _STOPPED:
+                    return
+                st.items += 1
+        finally:
+            # stop-aware EOS: never a blocking put into a full queue
+            self._raw_q.put(_EOS)
 
-    # ---- public API -----------------------------------------------------
+    # ---- public API ------------------------------------------------------
 
     def start(self) -> "StreamingExecutor":
         if not self._started:
             self._reader.start()
-            self._producer.start()
+            for s in self._stages:
+                s.start()
             self._started = True
         return self
 
     def __iter__(self):
         self.start()
+        dst = self.stats.stages["deliver"]
         while True:
             w0 = time.perf_counter()
-            item = self._packed_q.get()
-            self.stats.consumer_wait_s += time.perf_counter() - w0
-            if item is _SENTINEL:
+            item = self._ready_q.get()
+            wait = time.perf_counter() - w0
+            self.stats.consumer_wait_s += wait
+            dst.wait_in_s += wait
+            if item is _EOS or item is _STOPPED:
                 return
-            packed, _ts = item
             self.stats.consumed += 1
-            yield packed
+            dst.items += 1
+            yield item
 
     def get_batch(self, timeout: Optional[float] = None):
         self.start()
+        dst = self.stats.stages["deliver"]
         w0 = time.perf_counter()
-        item = self._packed_q.get(timeout=timeout)
-        self.stats.consumer_wait_s += time.perf_counter() - w0
-        if item is _SENTINEL:
+        item = self._ready_q.get(timeout=timeout)
+        wait = time.perf_counter() - w0
+        self.stats.consumer_wait_s += wait
+        dst.wait_in_s += wait
+        if item is _EOS or item is _STOPPED:
             raise StopIteration
         self.stats.consumed += 1
-        return item[0]
+        dst.items += 1
+        return item
 
     def stop(self):
+        """Prompt, non-blocking shutdown: stages unblock on the stop event
+        even when their queues are full (no sentinel deadlock)."""
         self._stop.set()
+        for q in (self._raw_q, self._packed_q, self._ready_q):
+            q.wake()
+
+    def join(self, timeout: Optional[float] = None) -> bool:
+        """Wait for all stage threads to exit; True if they all did."""
+        deadline = (time.monotonic() + timeout) if timeout is not None else None
+        threads = ([self._reader] + self._stages) if self._started else []
+        for t in threads:
+            rem = None if deadline is None else max(0.0, deadline - time.monotonic())
+            t.join(rem)
+        return all(not t.is_alive() for t in threads)
+
+    def queue_depths(self) -> dict:
+        return {"raw": len(self._raw_q), "packed": len(self._packed_q),
+                "ready": len(self._ready_q)}
 
     def __enter__(self):
         return self.start()

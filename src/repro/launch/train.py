@@ -35,13 +35,18 @@ from repro.training.train_loop import (LoopConfig, TrainState, jit_train_step,
                                        make_train_step, train_loop)
 
 
-def make_batches(cfg, batch, seq, steps, *, backend="jnp"):
-    """Streaming ETL source: raw event logs -> token batches (overlapped)."""
+def make_batches(cfg, batch, seq, steps, *, backend="jnp", mesh=None):
+    """Streaming ETL source: raw event logs -> token batches (overlapped).
+
+    With a mesh, the executor's place stage double-buffers ``device_put``
+    with the trainer's batch ``NamedSharding``, so delivered batches are
+    already laid out for ``train_step``'s ``in_shardings``.
+    """
     pipe = lm_token_pipeline(seq, cfg.vocab_size,
                              batch_size=batch).compile(backend=backend)
     src = synth.lm_event_batches(seq, rows=batch * (steps + 4),
                                  batch_size=batch)
-    return StreamingExecutor(pipe, src, credits=2)
+    return StreamingExecutor(pipe, src, credits=2, mesh=mesh)
 
 
 def main(argv=None):
@@ -101,7 +106,7 @@ def main(argv=None):
                 state = make_state()
 
             batches = make_batches(cfg, args.batch, args.seq, args.steps,
-                                   backend=args.etl_backend)
+                                   backend=args.etl_backend, mesh=mesh)
             loop_cfg = LoopConfig(total_steps=args.steps,
                                   ckpt_dir=args.ckpt_dir,
                                   ckpt_every=args.ckpt_every,
@@ -118,6 +123,11 @@ def main(argv=None):
                   f"{stats.producer_wait_s:.2f}s trainer_wait="
                   f"{stats.consumer_wait_s:.2f}s "
                   f"util={stats.trainer_utilization(dt - stats.consumer_wait_s):.2%}")
+            for name, s in stats.stage_breakdown().items():
+                print(f"[train]   stage {name:9s} items={s['items']:<5d} "
+                      f"busy={s['busy_s']:.2f}s wait_in={s['wait_in_s']:.2f}s "
+                      f"wait_out={s['wait_out_s']:.2f}s "
+                      f"occ={s['occupancy']:.1%}")
             return final
 
         return run

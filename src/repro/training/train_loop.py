@@ -92,9 +92,15 @@ class LoopConfig:
 
 def train_loop(state: TrainState, step_fn, batches, loop_cfg: LoopConfig,
                *, async_ckpt: bool = True, on_metrics=None) -> TrainState:
-    """Run to total_steps with periodic async checkpoints + watchdog."""
+    """Run to total_steps with periodic async checkpoints + watchdog.
+
+    ``batches`` may be a plain iterable or a staged ``StreamingExecutor``;
+    an executor is stopped on exit (so breaking at ``total_steps`` tears the
+    prefetch stages down promptly) and its stats surface in the metrics.
+    """
     ckpt = ckpt_lib.AsyncCheckpointer() if async_ckpt else None
     wd = fault_lib.Watchdog(loop_cfg.watchdog_s) if loop_cfg.watchdog_s else None
+    etl_stats = getattr(batches, "stats", None)
     t0 = time.perf_counter()
     train_s = 0.0
     try:
@@ -117,6 +123,9 @@ def train_loop(state: TrainState, step_fn, batches, loop_cfg: LoopConfig,
                 m["step"] = step_no
                 m["train_utilization"] = train_s / max(
                     time.perf_counter() - t0, 1e-9)
+                if etl_stats is not None:
+                    m["etl_starved_s"] = etl_stats.consumer_wait_s
+                    m["etl_overlapped_s"] = etl_stats.overlapped_etl_s
                 if on_metrics:
                     on_metrics(m)
                 else:
@@ -131,6 +140,9 @@ def train_loop(state: TrainState, step_fn, batches, loop_cfg: LoopConfig,
                     ckpt_lib.save(state, loop_cfg.ckpt_dir, step_no)
                 ckpt_lib.prune(loop_cfg.ckpt_dir, loop_cfg.keep_ckpts)
     finally:
+        stop = getattr(batches, "stop", None)
+        if callable(stop):
+            stop()
         if ckpt:
             ckpt.wait()
         if wd:

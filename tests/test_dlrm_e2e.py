@@ -8,6 +8,7 @@ runtime, and consumed by the DLRM trainer; loss must decrease.
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs.base import TrainConfig
 from repro.core.pipeline import paper_pipeline
@@ -24,6 +25,7 @@ def _loss(params, batch):
     return dlrm.loss_fn(params, batch, CFG)
 
 
+@pytest.mark.slow
 def test_dlrm_trains_on_etl_stream():
     pipe = paper_pipeline("II", small_vocab=2048,
                           batch_size=512).compile(backend="jnp")

@@ -1,8 +1,16 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
+
+``hypothesis`` is an *optional* test dependency: when absent the whole module
+is skipped at collection so the tier-1 ``pytest -x`` run degrades gracefully
+instead of dying with a collection error.
+"""
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import operators as O
 from repro.core.pipeline import Pipeline, paper_pipeline

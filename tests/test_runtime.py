@@ -1,8 +1,8 @@
-"""ETL streaming runtime: overlap, backpressure, freshness, multi-tenancy,
-columnar storage."""
+"""ETL streaming runtime: staged prefetching executor, credit backpressure,
+freshness, stop semantics, multi-tenancy, columnar storage."""
 
-import os
 import tempfile
+import threading
 import time
 
 import numpy as np
@@ -14,13 +14,84 @@ from repro.core.semantics import (BatchingPolicy, FreshnessPolicy,
                                   OrderingPolicy, PipelineSemantics)
 from repro.data import columnar, synth
 from repro.etl_runtime.multitenant import PipelineManager
-from repro.etl_runtime.runtime import StreamingExecutor
+from repro.etl_runtime.runtime import (CreditQueue, StreamingExecutor,
+                                       _STOPPED)
 
 
 def _pipe(backend="jnp"):
     p = paper_pipeline("I", modulus=1024).compile(backend=backend)
     return p
 
+
+def _warm(pipe, batch_size=1000):
+    """Trigger the jit trace/compile outside the measured region."""
+    out = pipe(next(synth.dataset_batches("I", rows=batch_size,
+                                          batch_size=batch_size)))
+    for v in out.values():
+        if hasattr(v, "block_until_ready"):
+            v.block_until_ready()
+    return pipe
+
+
+# ---------------- stage machinery units ----------------
+
+def test_credit_queue_backpressure_bounds_depth():
+    """A put beyond capacity blocks until a get frees a credit."""
+    stop = threading.Event()
+    q = CreditQueue(2, stop)
+    assert q.put("a") == 0 and q.put("b") == 0
+    assert len(q) == 2
+    done = threading.Event()
+
+    def blocked_put():
+        q.put("c")
+        done.set()
+
+    t = threading.Thread(target=blocked_put, daemon=True)
+    t.start()
+    time.sleep(0.2)
+    assert not done.is_set()          # producer is credit-blocked
+    assert len(q) == 2                # depth never exceeds capacity
+    assert q.get() == "a"             # FIFO; frees one credit
+    assert done.wait(1.0)             # blocked put completes
+    assert len(q) == 2
+
+
+def test_credit_queue_drops_oldest_first():
+    stop = threading.Event()
+    q = CreditQueue(2, stop)
+    q.put("old"), q.put("mid")
+    assert q.put("new", drop_oldest=True) == 1  # sheds exactly one
+    assert len(q) == 2
+    assert q.get() == "mid" and q.get() == "new"  # "old" was the casualty
+
+
+def test_credit_queue_put_is_stop_aware():
+    """A full queue can never deadlock shutdown (the seed sentinel bug)."""
+    stop = threading.Event()
+    q = CreditQueue(1, stop)
+    q.put("x")
+    t0 = time.perf_counter()
+    stop.set()
+    q.wake()
+    assert q.put("y") is _STOPPED          # returns instead of hanging
+    assert q.get() is _STOPPED
+    assert time.perf_counter() - t0 < 1.0
+
+
+def test_executor_backpressure_bounds_inflight():
+    """With no consumer, delivered-batch count is bounded by credits."""
+    ex = StreamingExecutor(_pipe(), synth.dataset_batches(
+        "I", rows=8000, batch_size=1000), credits=2)
+    ex.start()
+    time.sleep(1.0)  # producer runs ahead while we don't consume
+    assert ex.stats.produced <= 2  # ready queue holds at most `credits`
+    assert all(d <= 2 for d in ex.queue_depths().values())
+    for _ in ex:
+        pass
+
+
+# ---------------- executor behaviour ----------------
 
 def test_executor_delivers_all_batches():
     ex = StreamingExecutor(_pipe(), synth.dataset_batches(
@@ -30,20 +101,14 @@ def test_executor_delivers_all_batches():
         assert np.asarray(batch["dense"]).shape[0] == 1000
         n += 1
     assert n == 5 and ex.stats.produced == 5 and ex.stats.consumed == 5
+    bd = ex.stats.stage_breakdown()
+    assert set(bd) == {"read", "transform", "place", "deliver"}
+    assert all(bd[s]["items"] == 5 for s in ("read", "transform", "place",
+                                             "deliver"))
+    assert bd["transform"]["busy_s"] > 0
 
 
-def test_backpressure_bounds_queue():
-    """Slow consumer: the producer must block on credits (bounded memory)."""
-    ex = StreamingExecutor(_pipe(), synth.dataset_batches(
-        "I", rows=8000, batch_size=1000), credits=2)
-    ex.start()
-    time.sleep(1.0)  # producer runs ahead while we don't consume
-    # it can have produced at most credits + 1 in-flight batches
-    assert ex.stats.produced <= 4
-    for _ in ex:
-        pass
-
-
+@pytest.mark.slow
 def test_freshness_drops_stale_batches():
     sem = PipelineSemantics(batching=BatchingPolicy(100),
                             freshness=FreshnessPolicy(max_staleness_batches=1))
@@ -57,33 +122,91 @@ def test_freshness_drops_stale_batches():
     assert len(got) + ex.stats.dropped_stale == ex.stats.produced
 
 
-def test_overlap_improves_utilization():
-    """Trainer utilization with overlap >= without (the paper's Fig 14)."""
-    def consume(executor, step_s):
-        t0 = time.perf_counter()
-        train = 0.0
-        for b in executor:
-            ts = time.perf_counter()
-            time.sleep(step_s)
-            train += time.perf_counter() - ts
-        return train / (time.perf_counter() - t0)
+def test_stop_returns_promptly_mid_stream():
+    """Regression (seed bug): stop() must not hang on full queues."""
+    def endless():
+        while True:
+            yield next(synth.dataset_batches("I", rows=500, batch_size=500))
 
-    # overlapped: ETL runs in the producer thread while we "train"
+    ex = StreamingExecutor(_pipe(), endless(), credits=1)
+    it = iter(ex)
+    next(it)                     # pipeline is mid-stream, queues filling
+    time.sleep(0.3)              # let every queue reach capacity
+    t0 = time.perf_counter()
+    ex.stop()
+    assert time.perf_counter() - t0 < 0.5   # stop() itself is non-blocking
+    assert ex.join(timeout=2.0)             # all stage threads exit promptly
+    assert list(it) == []                   # consumer unblocks too
+
+
+def test_stop_without_consumer_is_prompt():
+    """Seed deadlock shape: producer blocked on a full queue at stop time."""
     ex = StreamingExecutor(_pipe(), synth.dataset_batches(
-        "I", rows=6000, batch_size=1000), credits=2)
-    util_overlap = consume(ex, 0.05)
-    # blocking: ETL inline between steps
-    pipe = _pipe()
+        "I", rows=8000, batch_size=1000), credits=1)
+    ex.start()
+    time.sleep(0.5)              # no consumer: queues are full, stages blocked
+    ex.stop()
+    assert ex.join(timeout=2.0)
+
+
+@pytest.mark.slow
+def test_overlap_improves_utilization():
+    """Overlap hides a pinned ETL cost behind the train step (paper Fig 14).
+
+    Per-batch costs are deterministic sleeps (ETL_S in the place stage,
+    STEP_S in the trainer), so the expected utilizations are analytic:
+    blocking ≈ STEP/(STEP+ETL) vs overlapped ≈ STEP/(STEP+fill), and the
+    gain must clear a wide margin — no zero-margin wall-clock races.
+    """
+    ETL_S, STEP_S, N = 0.03, 0.05, 8
+
+    def slow_place(b):
+        time.sleep(ETL_S)
+        return b
+
+    ex = StreamingExecutor(_warm(_pipe()), synth.dataset_batches(
+        "I", rows=N * 1000, batch_size=1000), credits=2, place=slow_place)
     t0 = time.perf_counter()
     train = 0.0
-    for raw in synth.dataset_batches("I", rows=6000, batch_size=1000):
-        _ = {k: np.asarray(v) for k, v in pipe(raw).items()}
+    for _ in ex:
         ts = time.perf_counter()
-        time.sleep(0.05)
+        time.sleep(STEP_S)
+        train += time.perf_counter() - ts
+    util_overlap = train / (time.perf_counter() - t0)
+
+    # blocking: identical per-batch costs, ETL inline between steps
+    pipe = _warm(_pipe())
+    t0 = time.perf_counter()
+    train = 0.0
+    for raw in synth.dataset_batches("I", rows=N * 1000, batch_size=1000):
+        slow_place({k: np.asarray(v) for k, v in pipe(raw).items()})
+        ts = time.perf_counter()
+        time.sleep(STEP_S)
         train += time.perf_counter() - ts
     util_block = train / (time.perf_counter() - t0)
-    assert util_overlap > util_block
 
+    # deterministic per-stage evidence that ETL ran while training did
+    assert ex.stats.stages["place"].busy_s >= 0.8 * N * ETL_S
+    assert ex.stats.overlapped_etl_s > 0
+    assert util_overlap - util_block >= 0.05  # >= 5pp, with margin to spare
+
+
+@pytest.mark.slow
+def test_straggler_skip():
+    """A source that stalls beyond the timeout is skipped, not fatal."""
+    def slow_source():
+        yield next(synth.dataset_batches("I", rows=100, batch_size=100))
+        time.sleep(0.8)  # straggler
+        yield next(synth.dataset_batches("I", rows=100, batch_size=100, seed=1))
+
+    ex = StreamingExecutor(_pipe(), slow_source(), credits=2,
+                           read_timeout_s=0.2)
+    got = list(ex)
+    assert len(got) == 2  # both batches eventually arrive
+    assert ex.stats.skipped_straggler >= 1  # but the stall was detected
+
+
+# ---------------- multi-tenant (weighted-credit policy) ----------------
 
 def test_multitenant_concurrent_pipelines():
     mgr = PipelineManager()
@@ -95,6 +218,25 @@ def test_multitenant_concurrent_pipelines():
     assert len(res) == 3
     assert all(r.batches == 3 for r in res.values())
     assert all(r.rows_per_s > 0 for r in res.values())
+    # every tenant ran through the staged machinery
+    assert all(r.stage_breakdown["transform"]["items"] >= 3
+               for r in res.values())
+
+
+def test_multitenant_weights_split_credit_budget():
+    """Weights govern the staging-credit split across concurrent tenants."""
+    mgr = PipelineManager(total_credits=6)
+    mgr.add("heavy", _pipe(),
+            lambda: synth.dataset_batches("I", rows=2000, batch_size=1000,
+                                          seed=0), weight=2.0)
+    mgr.add("light", _pipe(),
+            lambda: synth.dataset_batches("I", rows=2000, batch_size=1000,
+                                          seed=1), weight=1.0)
+    assert mgr.credit_allocation() == {"heavy": 4, "light": 2}
+    res = mgr.run(n_batches=2)
+    assert res["heavy"].credits == 4 and res["light"].credits == 2
+    assert res["heavy"].weight == 2.0
+    assert all(r.batches == 2 for r in res.values())  # both made progress
 
 
 def test_multitenant_swap_is_o1():
@@ -107,6 +249,8 @@ def test_multitenant_swap_is_o1():
     with pytest.raises(KeyError):
         mgr.swap("missing", new_pipe, lambda: iter([]))
 
+
+# ---------------- columnar storage ----------------
 
 def test_columnar_roundtrip_and_selective_columns():
     schema = Schema.criteo_kaggle()
@@ -127,17 +271,3 @@ def test_columnar_roundtrip_and_selective_columns():
         rb = list(columnar.iter_batches(d, 600))
         assert all(next(iter(b.values())).shape[0] == 600 for b in rb)
         assert len(rb) == 4  # 2500 // 600, remainder dropped
-
-
-def test_straggler_skip():
-    """A source that stalls beyond the timeout is skipped, not fatal."""
-    def slow_source():
-        yield next(synth.dataset_batches("I", rows=100, batch_size=100))
-        time.sleep(0.8)  # straggler
-        yield next(synth.dataset_batches("I", rows=100, batch_size=100, seed=1))
-
-    ex = StreamingExecutor(_pipe(), slow_source(), credits=2,
-                           read_timeout_s=0.2)
-    got = list(ex)
-    assert len(got) == 2  # both batches eventually arrive
-    assert ex.stats.skipped_straggler >= 1  # but the stall was detected

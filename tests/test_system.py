@@ -9,6 +9,7 @@ import tempfile
 
 import jax
 import numpy as np
+import pytest
 
 from repro.configs.base import ShapeCfg, TrainConfig
 from repro.configs.registry import get_reduced
@@ -22,6 +23,7 @@ from repro.training.train_loop import (LoopConfig, TrainState, make_train_step,
                                        train_loop)
 
 
+@pytest.mark.slow
 def test_full_recsys_system_with_restart():
     """ETL-fed DLRM training that crashes, restarts, and finishes."""
     cfg = dlrm.DLRMConfig(vocab_size=1025, d_emb=8, bot_mlp=(32, 8),
@@ -60,6 +62,7 @@ def test_full_recsys_system_with_restart():
         assert int(final.step) == 16
 
 
+@pytest.mark.slow
 def test_full_lm_system():
     """The same engine feeding an assigned-architecture LM trainer."""
     cfg = get_reduced("llama3_2_3b")
