@@ -47,8 +47,12 @@ def main():
 
     tcfg = TrainConfig(lr=1e-3)
     state = TrainState.create(dlrm.init(jax.random.key(0), cfg), tcfg)
+    # donate the packed batch too: it arrives pre-placed from the executor
+    # and is consumed exactly once, so XLA may reuse its HBM in-step
+    # (the CPU backend cannot alias donated inputs, so gate on device)
+    donate = (0, 1) if jax.default_backend() != "cpu" else (0,)
     step = jax.jit(make_train_step(lambda p, b: dlrm.loss_fn(p, b, cfg),
-                                   tcfg), donate_argnums=0)
+                                   tcfg), donate_argnums=donate)
 
     source = synth.dataset_batches("I", rows=args.steps * args.batch,
                                    batch_size=args.batch, seed=11)

@@ -4,15 +4,38 @@ Three backends share identical semantics (tests enforce bit-equality):
 
 - ``numpy``  : the CPU-baseline oracle (the paper's pandas path).
 - ``jnp``    : XLA-jitted; stages are fused by XLA (the GPU/NVTabular analogue).
-- ``pallas`` : each fused stage / vocab op / packer runs as an explicit Pallas
-  kernel with BlockSpec VMEM tiling — the FPGA-dataflow analogue. The whole
-  apply program is wrapped in one jit so a batch is a single device dispatch.
+- ``pallas`` : the streaming-dataflow analogue of the paper's FPGA pipeline.
+
+The pallas backend has two lowerings, chosen per ``PackOutput`` from the
+plan's ``DataflowProgram`` nodes:
+
+- **fused** (``fuse="auto"``, the default): every legal output lowers to ONE
+  row-tiled streaming kernel (``kernels/dataflow.make_output_dataflow``).
+  Raw column blocks stream through VMEM; the fused elementwise chains, hex
+  decode, vocab rank-lookup and one-hot expansion execute per-tile as stages
+  of a single kernel body; results land at their static lane offsets of the
+  packed output.  No intermediate HBM tensors, no separate packer pass —
+  this is the paper's "operators connected by on-chip FIFOs with a
+  format-aware packer" as one ``pallas_call`` per output.
+- **staged** (fallback, or ``fuse="off"``): each fused stage / vocab op /
+  packer runs as its own Pallas kernel with full HBM materialization in
+  between — the NVTabular-style baseline the paper argues against, kept both
+  as the legality escape hatch (HBM-resident tables, oversized tiles,
+  unknown stage kinds) and as the measurable comparison point for
+  ``benchmarks/bench_pipelines.py``.
+
+Either way the whole apply program is wrapped in one jit so a batch is a
+single device dispatch, and the numpy/jnp oracles are untouched — the
+three-backend bit-equality invariant pins fused and staged semantics alike.
 
 Vocabulary *fit* is streamed: chunked first-occurrence build (Pallas kernel or
 jnp scatter-min), merged into a two-int32 global state, finalized into frozen
 rank tables.  Tables are pipeline state, versioned for point-in-time
 correctness, and passed to the apply program as arguments (no recompilation on
-table refresh — the partial-reconfiguration analogue is a state swap).
+table refresh — the partial-reconfiguration analogue is a state swap).  For
+fused outputs the OOV rule is folded into the table once per table version
+(cached host-side; O(capacity) at fit/swap time, nothing per batch), so the
+in-kernel lookup is a pure gather.
 """
 
 from __future__ import annotations
@@ -26,10 +49,30 @@ import numpy as np
 
 from repro.core import operators as ops_lib
 from repro.core.dag import NodeType
-from repro.core.planner import (CrossStage, ExecutionPlan, FusedStage,
-                                OneHotStage, PackOutput, VocabLookupStage)
+from repro.core.planner import (CrossStage, DataflowProgram, ExecutionPlan,
+                                FusedStage, OneHotStage, PackOutput,
+                                VocabLookupStage)
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
+from repro.kernels.dataflow import StreamInput, TableInput, TileStep
+
+
+def count_pallas_calls(jaxpr) -> int:
+    """Count ``pallas_call`` equations in a (Closed)Jaxpr, nested included.
+
+    Used by tests to assert the fused lowering really issues a single
+    streaming kernel per PackOutput.
+    """
+    inner = getattr(jaxpr, "jaxpr", jaxpr)
+    n = 0
+    for eqn in inner.eqns:
+        if eqn.primitive.name == "pallas_call":
+            n += 1
+        for v in eqn.params.values():
+            for sub in (v if isinstance(v, (list, tuple)) else (v,)):
+                if hasattr(sub, "eqns") or hasattr(sub, "jaxpr"):
+                    n += count_pallas_calls(sub)
+    return n
 
 
 @dataclasses.dataclass
@@ -82,14 +125,24 @@ class CompiledPipeline:
     """Executable ETL pipeline with fit/apply phases."""
 
     def __init__(self, plan: ExecutionPlan, graph, backend: str = "jnp", *,
-                 interpret: Optional[bool] = None, name: str = "pipeline"):
+                 interpret: Optional[bool] = None, name: str = "pipeline",
+                 fuse: str = "auto"):
         if backend not in ("numpy", "jnp", "pallas"):
             raise ValueError(f"unknown backend {backend!r}")
+        if fuse not in ("auto", "off"):
+            raise ValueError(f"unknown fuse mode {fuse!r}")
         self.plan = plan
         self.graph = graph
         self.backend = backend
         self.name = name
+        self.fuse = fuse
         self.interpret = kops.default_interpret() if interpret is None else interpret
+        # per-output fused programs: only the pallas backend has a tile
+        # codegen; jnp relies on XLA fusion and numpy is the oracle
+        self._fused_programs: dict[str, DataflowProgram] = {}
+        if backend == "pallas" and fuse == "auto":
+            self._fused_programs = {dp.output: dp for dp in plan.dataflows
+                                    if dp.legal}
         self.state = PipelineState(
             tables={vf.vocab_id: np.full(vf.capacity, -1, np.int32)
                     for vf in plan.vocab_fits},
@@ -97,8 +150,12 @@ class CompiledPipeline:
             version=0)
         self._source_nodes = {n.id: n for n in graph.nodes
                               if n.kind == NodeType.SOURCE}
+        self._resolved_cache: tuple = (-1, {})
+        self._staged_cache: tuple = (-1, ({}, {}))
+        self._staged_vocab_ids: list[str] = []
         if backend != "numpy":
-            self._apply_jit = jax.jit(self._build_apply())
+            self._apply_fn = self._build_apply()
+            self._apply_jit = jax.jit(self._apply_fn)
             self._fit_chunk_jit = jax.jit(self._build_fit_chunk())
 
     # ------------------------------------------------------------------
@@ -170,10 +227,16 @@ class CompiledPipeline:
                 raise NotImplementedError(type(s))
         return bufs
 
-    def _stage_fns(self) -> dict:
-        """Per-stage jnp/pallas callables keyed by stage_id."""
+    def _stage_fns(self, needed_ids: Optional[set] = None) -> dict:
+        """Per-stage jnp/pallas callables keyed by stage_id.
+
+        ``needed_ids`` restricts codegen to the stages the staged path will
+        actually run (fused outputs bypass per-stage kernels entirely).
+        """
         fns = {}
         for s in self.plan.stages:
+            if needed_ids is not None and s.stage_id not in needed_ids:
+                continue
             if isinstance(s, FusedStage):
                 chain = _chain_fn(s)
                 if self.backend == "pallas":
@@ -203,21 +266,72 @@ class CompiledPipeline:
                     fns[s.stage_id] = kref.vocab_lookup
         return fns
 
+    def _build_dataflow_fn(self, po: PackOutput, dp: DataflowProgram):
+        """Lower one legal DataflowProgram to its single streaming kernel."""
+        plan = self.plan
+        inputs = [StreamInput(b, plan.buffers[b].width, plan.buffers[b].dtype,
+                              plan.buffers[b].hex_width)
+                  for b in dp.source_buffers]
+        tbl_index = {vid: i for i, vid in enumerate(dp.vocab_ids)}
+        tables: list = [None] * len(dp.vocab_ids)
+        steps = []
+        for sid in dp.stage_ids:
+            s = plan.stage_by_id(sid)
+            if isinstance(s, FusedStage):
+                steps.append(TileStep("map", s.out_buf, (s.in_buf,),
+                                      fn=_chain_fn(s)))
+            elif isinstance(s, CrossStage):
+                steps.append(TileStep("join", s.out_buf, (s.in_a, s.in_b),
+                                      fn=s.op.jnp_expr2))
+            elif isinstance(s, OneHotStage):
+                steps.append(TileStep("map", s.out_buf, (s.in_buf,),
+                                      fn=s.op.jnp_expr))
+            elif isinstance(s, VocabLookupStage):
+                idx = tbl_index[s.vocab_id]
+                tables[idx] = TableInput(s.vocab_id, s.capacity)
+                steps.append(TileStep("lookup", s.out_buf, (s.in_buf,),
+                                      table=idx))
+            else:  # pragma: no cover - legality pass rejects these
+                raise NotImplementedError(type(s))
+        terminals = [(b, plan.buffers[b].width) for b in po.buffers]
+        return kops.output_dataflow(inputs, tables, steps, terminals,
+                                    po.dtype, pad_cols_to=po.pad_cols_to,
+                                    interpret=self.interpret)
+
     def _build_apply(self) -> Callable:
         plan = self.plan
-        fns = self._stage_fns()
+        fused = self._fused_programs
+        staged_pos = [po for po in plan.pack if po.name not in fused]
+        if fused:
+            staged_ids: set = set()
+            for po in staged_pos:
+                staged_ids.update(plan.output_slice(po))
+        else:
+            staged_ids = {s.stage_id for s in plan.stages}
+        # raw tables only reach the device for staged lookups; fully fused
+        # vocabularies travel solely as their cached OOV-resolved form
+        self._staged_vocab_ids = sorted(
+            s.vocab_id for s in plan.stages
+            if isinstance(s, VocabLookupStage) and s.stage_id in staged_ids)
+        dfmap = {dp.output: dp for dp in plan.dataflows}
+        fns = self._stage_fns(staged_ids)
+        dataflows = {name: self._build_dataflow_fn(
+                         next(po for po in plan.pack if po.name == name), dp)
+                     for name, dp in fused.items()}
         packers = {}
         if self.backend == "pallas":
-            for po in plan.pack:
+            for po in staged_pos:
                 widths = [plan.buffers[b].width for b in po.buffers]
                 dts = [plan.buffers[b].dtype for b in po.buffers]
                 packers[po.name] = kops.packer(
                     widths, dts, po.dtype, pad_cols_to=po.pad_cols_to,
                     interpret=self.interpret)
 
-        def apply_fn(tables, n_uniques, cols):
+        def apply_fn(tables, n_uniques, resolved, cols):
             bufs = dict(self._assemble_sources_jnp(cols))
             for s in plan.stages:
+                if s.stage_id not in staged_ids:
+                    continue
                 if isinstance(s, FusedStage):
                     bufs[s.out_buf] = fns[s.stage_id](bufs[s.in_buf])
                 elif isinstance(s, CrossStage):
@@ -230,6 +344,13 @@ class CompiledPipeline:
                         n_uniques[s.vocab_id])
             out = {}
             for po in plan.pack:
+                dp = dfmap.get(po.name)
+                if po.name in fused:
+                    args = ([bufs[b] for b in dp.source_buffers]
+                            + [resolved[vid] for vid in dp.vocab_ids])
+                    packed = dataflows[po.name](*args)
+                    out[po.name] = packed[:, 0] if po.squeeze else packed
+                    continue
                 blocks = [bufs[b] for b in po.buffers]
                 if self.backend == "pallas" and not po.squeeze:
                     out[po.name] = packers[po.name](*blocks)
@@ -241,10 +362,14 @@ class CompiledPipeline:
         return apply_fn
 
     def _build_fit_chunk(self) -> Callable:
-        """One streamed fit chunk: run upstream stages, build chunk first-pos."""
+        """One streamed fit chunk: run upstream stages, build chunk first-pos.
+
+        Fit always runs stage-at-a-time: it ends in a keyed reduction, not a
+        packed batch, so there is no output program to fuse into.
+        """
         plan = self.plan
-        fns = self._stage_fns()
         fit_ids = set(plan.fit_stage_ids)
+        fns = self._stage_fns(fit_ids)
         builds = {}
         for vf in plan.vocab_fits:
             parts = 1 if vf.placement == "vmem" else max(
@@ -333,6 +458,41 @@ class CompiledPipeline:
                                    version=self.state.version + 1)
         return self.state
 
+    def _resolved_tables(self) -> dict:
+        """OOV-resolved (1, capacity) tables for the fused kernels' gathers:
+        table'[v] = rank if present else n_unique.  Computed once per state
+        version — tables only change at fit/swap time, so the apply hot path
+        never pays the O(capacity) fold per batch."""
+        fused_vids = {vid for dp in self._fused_programs.values()
+                      for vid in dp.vocab_ids}
+        if not fused_vids:
+            return {}
+        ver, cached = self._resolved_cache
+        if ver == self.state.version:
+            return cached
+        resolved = {}
+        for vid in sorted(fused_vids):
+            t = np.asarray(self.state.tables[vid])
+            n = self.state.n_unique[vid]
+            resolved[vid] = jnp.asarray(
+                np.where(t >= 0, t, n).astype(np.int32).reshape(1, -1))
+        self._resolved_cache = (self.state.version, resolved)
+        return resolved
+
+    def _staged_table_args(self) -> tuple:
+        """Device-resident raw tables + n_unique scalars for the staged
+        lookups only, uploaded once per state version (fully fused
+        vocabularies never ship their raw table to the apply program)."""
+        ver, cached = self._staged_cache
+        if ver == self.state.version:
+            return cached
+        tables = {vid: jnp.asarray(self.state.tables[vid])
+                  for vid in self._staged_vocab_ids}
+        n_uniq = {vid: jnp.asarray(self.state.n_unique[vid], jnp.int32)
+                  for vid in self._staged_vocab_ids}
+        self._staged_cache = (self.state.version, (tables, n_uniq))
+        return tables, n_uniq
+
     def __call__(self, raw_batch: dict) -> dict:
         """Apply phase: raw columnar batch -> packed training-ready tensors."""
         if self.backend == "numpy":
@@ -350,12 +510,46 @@ class CompiledPipeline:
                     cat = np.pad(cat, ((0, 0), (0, padded - cat.shape[1])))
                 out[po.name] = cat[:, 0] if po.squeeze else cat
             return out
-        tables = {vid: jnp.asarray(t) for vid, t in self.state.tables.items()}
-        n_uniq = {vid: jnp.asarray(n, jnp.int32)
-                  for vid, n in self.state.n_unique.items()}
+        tables, n_uniq = self._staged_table_args()
         cols = {k: jnp.asarray(v) for k, v in self._raw_columns(raw_batch).items()}
-        return self._apply_jit(tables, n_uniq, cols)
+        return self._apply_jit(tables, n_uniq, self._resolved_tables(), cols)
 
     # stats used by benchmarks / Table-4 analogue
     def resource_summary(self) -> dict:
         return self.plan.resource_summary()
+
+    def lowering_report(self) -> dict:
+        """Per-output lowering decision: fused single-kernel vs staged.
+
+        Keys are PackOutput names; ``path`` is "fused" or "staged", and for
+        staged outputs ``reason`` explains the fallback ("" means the
+        backend/fuse mode simply has no tile codegen).
+        """
+        dfmap = {dp.output: dp for dp in self.plan.dataflows}
+        rep = {}
+        for po in self.plan.pack:
+            dp = dfmap.get(po.name)
+            rep[po.name] = {
+                "path": "fused" if po.name in self._fused_programs else "staged",
+                "legal": dp.legal if dp else False,
+                "reason": dp.reason if dp else "no dataflow program planned",
+                "n_stages": dp.n_stages if dp else 0,
+                "vocab_ids": list(dp.vocab_ids) if dp else [],
+            }
+        return rep
+
+    def traced_pallas_call_count(self, raw_batch: dict) -> int:
+        """Number of pallas_call primitives the apply program traces to.
+
+        With the fused lowering this equals ``len(plan.pack)`` — one
+        streaming kernel per output (the acceptance invariant); the staged
+        lowering traces one call per stage plus one per packer.
+        """
+        if self.backend == "numpy":
+            return 0
+        tables, n_uniq = self._staged_table_args()
+        cols = {k: jnp.asarray(v)
+                for k, v in self._raw_columns(raw_batch).items()}
+        jaxpr = jax.make_jaxpr(self._apply_fn)(tables, n_uniq,
+                                               self._resolved_tables(), cols)
+        return count_pallas_calls(jaxpr)

@@ -80,14 +80,18 @@ class Pipeline:
 
     def compile(self, backend: str = "jnp", *, interpret: Optional[bool] = None,
                 vmem_budget: int = 4 << 20, lanes: int = 8,
-                vector_width: int = 128) -> CompiledPipeline:
+                vector_width: int = 128, fuse: str = "auto") -> CompiledPipeline:
+        """Lower the DAG. ``fuse="auto"`` (pallas backend) lowers each legal
+        output to a single streaming dataflow kernel; ``fuse="off"`` forces
+        the stage-at-a-time lowering (the measurable baseline)."""
         if not self._outputs:
             raise ValueError("pipeline has no outputs; call .output(...)")
         planner = Planner(self.graph, vmem_budget=vmem_budget, lanes=lanes,
                           vector_width=vector_width)
         plan = planner.plan(self._outputs)
         return CompiledPipeline(plan, self.graph, backend,
-                                interpret=interpret, name=self.name)
+                                interpret=interpret, name=self.name,
+                                fuse=fuse)
 
 
 # ---------------------------------------------------------------------------

@@ -8,6 +8,15 @@ The five planning steps mirror the paper's planner-compiler:
   (4) place vocabulary state in VMEM (BRAM analogue) or HBM and size tables,
   (5) emit the runtime plan: stage list, buffer specs, batching policy.
 
+A sixth, plan-level pass groups the per-output stage chains into
+``DataflowProgram`` nodes (the paper's full streaming dataflow: operators
+connected by on-chip FIFOs ending in the format-aware packer).  Each program
+is the backward slice of stages feeding one ``PackOutput``; a legality check
+decides whether the slice can lower to a *single* streaming kernel (all
+tables VMEM-resident, per-tile working set within budget).  Illegal programs
+fall back to stage-at-a-time lowering, so fusion is an optimization, never a
+constraint on expressible plans.
+
 The plan is backend-neutral; compiler.py lowers it to numpy / jnp / Pallas.
 """
 
@@ -105,6 +114,28 @@ class PackOutput:
 
 
 @dataclasses.dataclass
+class DataflowProgram:
+    """Backward stage slice feeding one PackOutput (plan-level fusion node).
+
+    When ``legal``, the compiler lowers the whole slice — elementwise chains,
+    hex decode, vocab rank-lookup, one-hot expansion and the packing epilogue
+    — to ONE row-tiled streaming kernel with no intermediate HBM tensors.
+    When illegal (``reason`` says why), the output lowers stage-at-a-time.
+    """
+
+    output: str                    # PackOutput.name
+    stage_ids: list[str]           # topo-ordered slice of plan.stages
+    source_buffers: list[str]      # raw inputs the slice reads
+    vocab_ids: list[str]           # tables consumed, in lookup-stage order
+    legal: bool = True
+    reason: str = ""
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.stage_ids)
+
+
+@dataclasses.dataclass
 class ExecutionPlan:
     buffers: dict[str, BufferSpec]
     stages: list  # topological order, apply phase
@@ -112,12 +143,26 @@ class ExecutionPlan:
     vocab_fits: list[VocabFit]
     pack: list[PackOutput]
     source_buffers: list[str]
+    dataflows: list[DataflowProgram] = dataclasses.field(default_factory=list)
 
     def stage_by_id(self, sid: str):
         for s in self.stages:
             if s.stage_id == sid:
                 return s
         raise KeyError(sid)
+
+    def output_slice(self, po: PackOutput) -> list[str]:
+        """Topo-ordered stage ids in the backward slice of one output."""
+        needed = set(po.buffers)
+        ids: list[str] = []
+        for s in reversed(self.stages):
+            if getattr(s, "out_buf", None) in needed:
+                ids.append(s.stage_id)
+                for attr in ("in_buf", "in_a", "in_b"):
+                    b = getattr(s, attr, None)
+                    if b:
+                        needed.add(b)
+        return list(reversed(ids))
 
     # ---- Table-4 analogue: resource summary -----------------------------
     def resource_summary(self) -> dict:
@@ -140,11 +185,20 @@ class ExecutionPlan:
 
 class Planner:
     def __init__(self, graph: Graph, *, vmem_budget: int = VMEM_TABLE_BUDGET,
-                 lanes: int = 8, vector_width: int = 128):
+                 lanes: int = 8, vector_width: int = 128,
+                 dataflow_vmem_budget: Optional[int] = None):
         self.graph = graph
         self.vmem_budget = vmem_budget
         self.lanes = lanes
         self.vector_width = vector_width
+        # Fused-kernel per-tile working-set bound (stream tiles +
+        # intermediates + tables + output tile, double-buffered).  It tracks
+        # the user's declared VMEM headroom: tables (each <= vmem_budget by
+        # placement) plus equal tile space — 8 MiB at the 4 MiB default,
+        # ~half a TPU core's VMEM, leaving room for the compiler.
+        self.dataflow_vmem_budget = (2 * vmem_budget
+                                     if dataflow_vmem_budget is None
+                                     else dataflow_vmem_budget)
 
     def plan(self, pack_outputs: list[tuple[str, list[Node], np.dtype, int, bool]]
              ) -> ExecutionPlan:
@@ -244,10 +298,84 @@ class Planner:
             pack.append(PackOutput(name, bufs, np.dtype(dtype), pad_to, squeeze))
 
         fit_stage_ids = self._fit_closure(stages, vocab_fits)
-        return ExecutionPlan(buffers=buffers, stages=stages,
+        plan = ExecutionPlan(buffers=buffers, stages=stages,
                              fit_stage_ids=fit_stage_ids,
                              vocab_fits=vocab_fits, pack=pack,
                              source_buffers=source_buffers)
+        plan.dataflows = [self._build_dataflow(plan, po) for po in plan.pack]
+        return plan
+
+    # ---- step 6: plan-level fusion (one streaming program per output) ----
+
+    FUSABLE_STAGES = (FusedStage, CrossStage, OneHotStage, VocabLookupStage)
+
+    def _build_dataflow(self, plan: ExecutionPlan, po: PackOutput,
+                        *, block_rows: int = 256) -> DataflowProgram:
+        """Backward-slice the stages feeding ``po`` and check legality.
+
+        Legal programs lower to a single row-tiled streaming kernel, so the
+        check is a VMEM feasibility argument: every buffer the slice touches
+        contributes one (block_rows x width) tile, every vocab table is
+        staged whole (it must be VMEM-placed), and the packed output tile
+        rides along.  Anything over budget — or any HBM-resident table, or a
+        stage kind the tile codegen does not know — falls back to the staged
+        path for this output only.
+        """
+        stage_ids = plan.output_slice(po)
+        stages = [plan.stage_by_id(sid) for sid in stage_ids]
+
+        # source buffers = slice inputs that no slice stage produces
+        produced = {s.out_buf for s in stages}
+        sources: list[str] = []
+        consumed: list[str] = []
+        for s in stages:
+            for attr in ("in_buf", "in_a", "in_b"):
+                b = getattr(s, attr, None)
+                if b:
+                    consumed.append(b)
+        for b in consumed + list(po.buffers):
+            if b not in produced and b not in sources:
+                sources.append(b)
+
+        vocab_ids: list[str] = []
+        for s in stages:
+            if isinstance(s, VocabLookupStage) and s.vocab_id not in vocab_ids:
+                vocab_ids.append(s.vocab_id)
+
+        for b in po.buffers:
+            if plan.buffers[b].hex_width:
+                return DataflowProgram(
+                    po.name, stage_ids, sources, vocab_ids, legal=False,
+                    reason=f"terminal {b} is a raw hex block; the packer "
+                           "epilogue writes 2-D lane tiles only")
+        for s in stages:
+            if not isinstance(s, self.FUSABLE_STAGES):
+                return DataflowProgram(po.name, stage_ids, sources, vocab_ids,
+                                       legal=False,
+                                       reason=f"unsupported stage {type(s).__name__}")
+        for s in stages:
+            if isinstance(s, VocabLookupStage) and s.placement != "vmem":
+                return DataflowProgram(
+                    po.name, stage_ids, sources, vocab_ids, legal=False,
+                    reason=f"vocab {s.vocab_id} is {s.placement}-resident; "
+                           "the streaming kernel stages tables in VMEM")
+
+        tile_bytes = 0
+        for b in set(sources) | produced:
+            spec = plan.buffers[b]
+            tile_bytes += block_rows * spec.bytes_per_row
+        table_bytes = sum(4 * s.capacity for s in stages
+                          if isinstance(s, VocabLookupStage))
+        out_w = sum(plan.buffers[b].width for b in po.buffers)
+        padded_w = -(-out_w // po.pad_cols_to) * po.pad_cols_to
+        out_bytes = block_rows * padded_w * po.dtype.itemsize
+        working_set = 2 * (tile_bytes + out_bytes) + table_bytes
+        if working_set > self.dataflow_vmem_budget:
+            return DataflowProgram(
+                po.name, stage_ids, sources, vocab_ids, legal=False,
+                reason=f"per-tile working set {working_set} exceeds "
+                       f"budget {self.dataflow_vmem_budget}")
+        return DataflowProgram(po.name, stage_ids, sources, vocab_ids)
 
     @staticmethod
     def _fit_closure(stages, vocab_fits) -> list[str]:

@@ -50,6 +50,9 @@ class OrderingPolicy:
             raise ValueError(f"unknown ordering {self.kind!r}")
         if self.kind == "fifo" and self.reorder_window:
             raise ValueError("fifo ordering cannot have a reorder window")
+        if self.kind == "bucket_by_length" and self.reorder_window < 2:
+            raise ValueError("bucket_by_length needs reorder_window >= 2 "
+                             "(a smaller window cannot reorder anything)")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -3,8 +3,14 @@
 The pipeline is an explicit chain of stages connected by credit-bounded,
 stop-aware queues (the paper's GPU staging buffers):
 
-  read ──raw──▶ transform ──packed──▶ place ──ready──▶ deliver (trainer)
-       credits              credits            credits
+  read ──raw──▶ transform ──packed──▶ [order] ──▶ place ──ready──▶ deliver
+       credits              credits               credits         (trainer)
+
+The optional **order** stage appears when ``OrderingPolicy.bucket_by_length``
+is selected: it buffers up to ``reorder_window`` packed batches and emits
+them in ascending length-key order (LM efficiency mode — similar-length
+batches train together), trading strict arrival order inside the bounded
+window only.  FIFO pipelines skip the stage entirely.
 
 - **read** pulls raw batches from the source iterator.  A source stall beyond
   ``read_timeout_s`` is detected downstream and counted as a straggler skip,
@@ -24,14 +30,24 @@ stop-aware queues (the paper's GPU staging buffers):
 
 Backpressure: each queue holds at most ``credits`` items and every stage
 blocks when its output queue is full, rate-matching ETL to trainer
-consumption exactly as the FPGA write path does.
+consumption exactly as the FPGA write path does.  With
+``adaptive_credits=True`` the budget is sized from measured stage occupancy
+instead of staying fixed: when the trainer starves across a decision window
+the staging queues grow (up to ``max_credits``) to absorb ETL jitter, and
+when batches pile up unconsumed the budget shrinks back toward the initial
+value (bounding staging memory).  Resizes are counted in
+``stats.credit_grows`` / ``stats.credit_shrinks``.
 
 Freshness: with ``FreshnessPolicy.online``, a full ready queue sheds its
 *oldest* queued batch to admit the fresh one (time-to-freshness over
 completeness); drops are counted in ``stats.dropped_stale``.
 
 Shutdown: ``stop()`` is prompt — queues are stop-aware (no unconditional
-blocking puts), so a full queue can never deadlock stage teardown.
+blocking puts), so a full queue can never deadlock stage teardown.  A stage
+function that raises never dies silently: the first error stops the
+pipeline and re-raises at the consumer (``RuntimeError`` chained to the
+stage exception), so one bad record fails the job loudly instead of
+hanging it.
 
 Every stage records busy / wait-in / wait-out time (``stats.stages``), giving
 the paper's Fig-8-style per-stage breakdown consumed by
@@ -46,6 +62,8 @@ import threading
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Iterator, Optional
+
+import numpy as np
 
 from repro.core.semantics import PipelineSemantics
 from repro.etl_runtime import transfer as transfer_lib
@@ -83,6 +101,14 @@ class CreditQueue:
         with self._cv:
             self._cv.notify_all()
 
+    def set_capacity(self, capacity: int) -> None:
+        """Resize the credit budget (adaptive credits). Growing unblocks
+        credit-waiting producers; shrinking never evicts queued items —
+        the queue drains down to the new bound."""
+        with self._cv:
+            self.capacity = max(1, capacity)
+            self._cv.notify_all()
+
     def put(self, item, *, drop_oldest: bool = False):
         """Block until enqueued. Returns the number of entries dropped to
         make room (0 normally), or ``_STOPPED`` if the executor stopped."""
@@ -92,9 +118,11 @@ class CreditQueue:
                 if self._stop.is_set():
                     return _STOPPED
                 if drop_oldest:
+                    # keep shedding until under the bound so a shrunk
+                    # capacity (adaptive credits) actually drains the queue
                     self._dq.popleft()
                     dropped += 1
-                    break
+                    continue
                 # every transition notifies under this lock and stop() wakes
                 # all queues, so an untimed wait cannot miss a wakeup
                 self._cv.wait()
@@ -153,6 +181,8 @@ class RuntimeStats:
     dropped_stale: int = 0
     skipped_straggler: int = 0
     consumer_wait_s: float = 0.0   # time trainer starved (ETL slower)
+    credit_grows: int = 0          # adaptive-credit budget increases
+    credit_shrinks: int = 0        # adaptive-credit budget decreases
     epoch_marks: list = field(default_factory=list)
     stages: dict = field(default_factory=dict)  # name -> StageStats
 
@@ -196,7 +226,8 @@ class _Stage(threading.Thread):
                  out_q: CreditQueue, *, drop_oldest: bool = False,
                  in_timeout_s: Optional[float] = None,
                  on_in_timeout: Optional[Callable[[], None]] = None,
-                 on_put: Optional[Callable[[int], None]] = None):
+                 on_put: Optional[Callable[[int], None]] = None,
+                 on_error: Optional[Callable[[BaseException], None]] = None):
         super().__init__(name=f"etl-{stats.name}", daemon=True)
         self.stats = stats
         self.fn = fn
@@ -206,6 +237,7 @@ class _Stage(threading.Thread):
         self.in_timeout_s = in_timeout_s
         self.on_in_timeout = on_in_timeout
         self.on_put = on_put
+        self.on_error = on_error
 
     def run(self):
         while True:
@@ -224,7 +256,14 @@ class _Stage(threading.Thread):
                 self.out_q.put(_EOS)
                 return
             t1 = time.perf_counter()
-            out = self.fn(item)
+            try:
+                out = self.fn(item)
+            except Exception as e:
+                # never die silently: surface the error and stop the
+                # pipeline so the consumer unblocks instead of hanging
+                if self.on_error:
+                    self.on_error(e)
+                return
             self.stats.busy_s += time.perf_counter() - t1
             t2 = time.perf_counter()
             r = self.out_q.put(out, drop_oldest=self.drop_oldest)
@@ -234,6 +273,82 @@ class _Stage(threading.Thread):
             self.stats.items += 1
             if self.on_put:
                 self.on_put(r)
+
+
+def default_length_key(batch) -> float:
+    """Length proxy for bucket_by_length: nonzero entries of the first
+    2-D integer tensor (token count for LM batches), else 0.
+
+    Forces the batch onto the host, so the sort stage synchronizes device
+    futures — acceptable because ordering buys its win at the trainer, after
+    the transform dispatch already overlapped.
+    """
+    if isinstance(batch, dict):
+        for v in batch.values():
+            a = np.asarray(v)
+            if a.ndim >= 2 and np.issubdtype(a.dtype, np.integer):
+                return float(np.count_nonzero(a))
+    return 0.0
+
+
+class _SortStage(threading.Thread):
+    """Bounded reorder window (OrderingPolicy.bucket_by_length).
+
+    Buffers up to ``window`` packed batches, flushes them in ascending
+    ``length_key`` order (stable: equal keys keep arrival order), then
+    refills.  EOS flushes the partial window before forwarding, so no batch
+    is lost; stop aborts promptly like every other stage.
+    """
+
+    def __init__(self, stats: StageStats, in_q: CreditQueue,
+                 out_q: CreditQueue, *, window: int,
+                 length_key: Callable = default_length_key,
+                 on_error: Optional[Callable[[BaseException], None]] = None):
+        super().__init__(name=f"etl-{stats.name}", daemon=True)
+        self.stats = stats
+        self.in_q = in_q
+        self.out_q = out_q
+        self.window = max(2, window)
+        self.length_key = length_key
+        self.on_error = on_error
+
+    def _flush(self, buf: list) -> bool:
+        t0 = time.perf_counter()
+        buf.sort(key=lambda kv: kv[0])
+        self.stats.busy_s += time.perf_counter() - t0
+        for _, item in buf:
+            t1 = time.perf_counter()
+            r = self.out_q.put(item)
+            self.stats.wait_out_s += time.perf_counter() - t1
+            if r is _STOPPED:
+                return False
+            self.stats.items += 1
+        buf.clear()
+        return True
+
+    def run(self):
+        buf: list = []
+        while True:
+            t0 = time.perf_counter()
+            item = self.in_q.get()
+            self.stats.wait_in_s += time.perf_counter() - t0
+            if item is _STOPPED:
+                return
+            if item is _EOS:
+                if buf and not self._flush(buf):
+                    return
+                self.out_q.put(_EOS)
+                return
+            t1 = time.perf_counter()
+            try:
+                buf.append((self.length_key(item), item))
+            except Exception as e:
+                if self.on_error:
+                    self.on_error(e)
+                return
+            self.stats.busy_s += time.perf_counter() - t1
+            if len(buf) >= self.window and not self._flush(buf):
+                return
 
 
 class StreamingExecutor:
@@ -249,23 +364,40 @@ class StreamingExecutor:
     place : optional explicit placement hook ``packed -> ready``; overrides
         ``sharding``/``mesh``.
     sharding : optional ``NamedSharding`` for the place stage (the trainer's
-        batch sharding — delivered batches are donation-ready).
+        batch sharding — delivered batches are donation-ready; pair with
+        ``jit_train_step(..., donate_batch=True)`` so the trainer actually
+        donates them).
     mesh : optional ``Mesh``; shorthand for
         ``sharding=transfer.batch_sharding(mesh)``.
     read_timeout_s : straggler bound on the raw queue; a stall beyond this is
         skipped (counted), not fatal.
+    adaptive_credits : size the credit budget from measured occupancy — grow
+        the staging queues when the trainer starves, shrink when batches sit
+        unconsumed (see module docstring).
+    max_credits : upper bound for adaptive growth.
+    length_key : batch -> sortable length for bucket_by_length ordering
+        (default: token count via ``default_length_key``).
     """
+
+    _ADAPT_EVERY = 4          # deliveries per resize decision
+    _STARVED_EPS_S = 1e-3     # a delivery that waited longer counts starved
 
     def __init__(self, pipeline, source: Iterator[dict], *,
                  semantics: Optional[PipelineSemantics] = None,
                  credits: int = 2,
                  place: Optional[Callable[[dict], dict]] = None,
                  sharding=None, mesh=None,
-                 read_timeout_s: float = 30.0):
+                 read_timeout_s: float = 30.0,
+                 adaptive_credits: bool = False, max_credits: int = 8,
+                 length_key: Callable = default_length_key):
         self.pipeline = pipeline
         self.semantics = semantics or getattr(pipeline, "semantics", None)
         self.credits = max(1, credits)
         self.read_timeout_s = read_timeout_s
+        self.adaptive_credits = adaptive_credits
+        self.max_credits = max(self.credits, max_credits)
+        self.current_credits = self.credits
+        self._adapt_waits: list[tuple] = []  # (wait_s, ready_full_at_pop)
         if place is None:
             if sharding is None and mesh is not None:
                 sharding = transfer_lib.batch_sharding(mesh)
@@ -276,8 +408,14 @@ class StreamingExecutor:
         self.place = place
         self._source = source
         self._stop = threading.Event()
+        self._error: Optional[BaseException] = None
         self.stats = RuntimeStats()
-        for name in ("read", "transform", "place", "deliver"):
+        ordering = self.semantics.ordering if self.semantics else None
+        reorder = bool(ordering and ordering.kind == "bucket_by_length"
+                       and ordering.reorder_window >= 2)
+        names = (("read", "transform", "order", "place", "deliver") if reorder
+                 else ("read", "transform", "place", "deliver"))
+        for name in names:
             self.stats.stages[name] = StageStats(name)
 
         fresh = bool(self.semantics and self.semantics.freshness.online)
@@ -292,15 +430,37 @@ class StreamingExecutor:
             self.stats.produced += 1
             self.stats.dropped_stale += dropped
 
+        def _on_error(exc: BaseException):
+            # first error wins; stop() unblocks every stage and the consumer
+            if self._error is None:
+                self._error = exc
+            self.stop()
+
+        place_in_q = self._packed_q
+        self._stages: list = []
+        if reorder:
+            # sorting stage between transform and place (ROADMAP item):
+            # its window is additional bounded staging, not credit-counted
+            self._sorted_q = CreditQueue(self.credits, self._stop, "sorted")
+            self._stages.append(_SortStage(
+                self.stats.stages["order"], self._packed_q, self._sorted_q,
+                window=ordering.reorder_window, length_key=length_key,
+                on_error=_on_error))
+            place_in_q = self._sorted_q
+        else:
+            self._sorted_q = None
         self._stages = [
             _Stage(self.stats.stages["transform"], self.pipeline,
                    self._raw_q, self._packed_q,
                    in_timeout_s=self.read_timeout_s,
-                   on_in_timeout=_on_straggler),
+                   on_in_timeout=_on_straggler, on_error=_on_error),
+            *self._stages,
             _Stage(self.stats.stages["place"], self.place,
-                   self._packed_q, self._ready_q,
-                   drop_oldest=fresh, on_put=_on_delivered),
+                   place_in_q, self._ready_q,
+                   drop_oldest=fresh, on_put=_on_delivered,
+                   on_error=_on_error),
         ]
+        self._on_error = _on_error
         self._reader = threading.Thread(target=self._read_loop,
                                         name="etl-read", daemon=True)
         self._started = False
@@ -317,6 +477,9 @@ class StreamingExecutor:
                     raw = next(it)
                 except StopIteration:
                     break
+                except Exception as e:
+                    self._on_error(e)
+                    return
                 st.busy_s += time.perf_counter() - t0
                 t1 = time.perf_counter()
                 r = self._raw_q.put(raw)
@@ -328,6 +491,44 @@ class StreamingExecutor:
             # stop-aware EOS: never a blocking put into a full queue
             self._raw_q.put(_EOS)
 
+    # ---- adaptive credits (occupancy-sized staging budget) ---------------
+
+    def _adapt(self, wait_s: float) -> None:
+        """One deliver-side observation; resize every ``_ADAPT_EVERY``.
+
+        Grow when the trainer starved on at least half of the window's
+        deliveries (deeper staging absorbs ETL jitter); shrink back toward
+        the configured floor when the window saw no starvation and every
+        pop found the ready queue full (staging memory doing nothing).
+        Fullness is sampled at pop time — the item just taken plus the
+        remaining depth — so the decision does not race the producer
+        refilling the queue.  Reclaim happens on deliveries: a fully paused
+        trainer holds the grown budget until it consumes again.
+        """
+        if not self.adaptive_credits:
+            return
+        full_at_pop = len(self._ready_q) + 1 >= self._ready_q.capacity
+        self._adapt_waits.append((wait_s, full_at_pop))
+        if len(self._adapt_waits) < self._ADAPT_EVERY:
+            return
+        starved = sum(1 for w, _ in self._adapt_waits
+                      if w > self._STARVED_EPS_S)
+        always_full = all(f for _, f in self._adapt_waits)
+        self._adapt_waits.clear()
+        if starved >= self._ADAPT_EVERY // 2 and \
+                self.current_credits < self.max_credits:
+            self.current_credits += 1
+            self.stats.credit_grows += 1
+        elif starved == 0 and always_full and \
+                self.current_credits > self.credits:
+            self.current_credits -= 1
+            self.stats.credit_shrinks += 1
+        else:
+            return
+        for q in (self._packed_q, self._ready_q, self._sorted_q):
+            if q is not None:
+                q.set_capacity(self.current_credits)
+
     # ---- public API ------------------------------------------------------
 
     def start(self) -> "StreamingExecutor":
@@ -337,6 +538,10 @@ class StreamingExecutor:
                 s.start()
             self._started = True
         return self
+
+    def _raise_if_failed(self) -> None:
+        if self._error is not None:
+            raise RuntimeError("ETL pipeline stage failed") from self._error
 
     def __iter__(self):
         self.start()
@@ -348,9 +553,11 @@ class StreamingExecutor:
             self.stats.consumer_wait_s += wait
             dst.wait_in_s += wait
             if item is _EOS or item is _STOPPED:
+                self._raise_if_failed()
                 return
             self.stats.consumed += 1
             dst.items += 1
+            self._adapt(wait)
             yield item
 
     def get_batch(self, timeout: Optional[float] = None):
@@ -362,17 +569,20 @@ class StreamingExecutor:
         self.stats.consumer_wait_s += wait
         dst.wait_in_s += wait
         if item is _EOS or item is _STOPPED:
+            self._raise_if_failed()
             raise StopIteration
         self.stats.consumed += 1
         dst.items += 1
+        self._adapt(wait)
         return item
 
     def stop(self):
         """Prompt, non-blocking shutdown: stages unblock on the stop event
         even when their queues are full (no sentinel deadlock)."""
         self._stop.set()
-        for q in (self._raw_q, self._packed_q, self._ready_q):
-            q.wake()
+        for q in (self._raw_q, self._packed_q, self._sorted_q, self._ready_q):
+            if q is not None:
+                q.wake()
 
     def join(self, timeout: Optional[float] = None) -> bool:
         """Wait for all stage threads to exit; True if they all did."""
@@ -384,8 +594,11 @@ class StreamingExecutor:
         return all(not t.is_alive() for t in threads)
 
     def queue_depths(self) -> dict:
-        return {"raw": len(self._raw_q), "packed": len(self._packed_q),
-                "ready": len(self._ready_q)}
+        depths = {"raw": len(self._raw_q), "packed": len(self._packed_q),
+                  "ready": len(self._ready_q)}
+        if self._sorted_q is not None:
+            depths["sorted"] = len(self._sorted_q)
+        return depths
 
     def __enter__(self):
         return self.start()

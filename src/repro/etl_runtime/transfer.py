@@ -28,8 +28,24 @@ def batch_sharding(mesh: Optional[Mesh], data_axes=("pod", "data")) -> Optional[
     return NamedSharding(mesh, P(axes if len(axes) > 1 else axes[0]))
 
 
+def donation_ready(batch: dict) -> bool:
+    """True when every value is a jax.Array the trainer can donate.
+
+    ``put_packed`` output always satisfies this; host numpy batches do not
+    (XLA copies them on dispatch, so donation would be meaningless).  Pair
+    with ``jit_train_step(..., donate_batch=True)`` to complete the
+    zero-copy handoff.
+    """
+    return all(isinstance(v, jax.Array) for v in batch.values())
+
+
 def put_packed(batch: dict, sharding: Optional[NamedSharding]) -> dict:
-    """Place a packed batch onto the mesh, sharded along rows (batch dim)."""
+    """Place a packed batch onto the mesh, sharded along rows (batch dim).
+
+    The returned arrays are committed device buffers in the trainer's
+    declared layout — donation-ready: a ``donate_argnums`` train step can
+    alias their HBM instead of copying.
+    """
     if sharding is None:
         return {k: jax.device_put(v) for k, v in batch.items()}
     out = {}

@@ -1,0 +1,256 @@
+"""Streaming Pallas dataflow kernels (paper §3: the full FPGA pipeline).
+
+This module is the kernel-side half of plan-level fusion.  It hosts three
+factories, in increasing order of fusion:
+
+``make_fused_stage``
+    One chain of stateless operators as one streaming kernel (Stage-A).
+    Used by the stage-at-a-time fallback path.
+
+``make_packer``
+    The format-aware packer as its own kernel (fallback epilogue): column
+    blocks are concatenated along lanes, cast to the trainer dtype, and the
+    width padded to the layout ``train_step`` declares.
+
+``make_output_dataflow``
+    The whole backward slice of one ``PackOutput`` as ONE row-tiled kernel —
+    the TPU statement of the paper's streaming dataflow.  Per grid step, a
+    row block of every raw source streams into VMEM, the fused elementwise
+    chains / hex decode / vocab rank-lookup / one-hot expansion execute
+    per-tile as ``TileStep``s of a single kernel body, and every terminal
+    buffer is stored at its static lane offset of the packed output block.
+    Intermediates live only in VMEM registers — no HBM tensor ever
+    materializes between operators, and the separate packer pass disappears
+    (packing is the kernel's epilogue).  Each byte of the stream crosses
+    HBM exactly twice: raw in, packed out.
+
+Vocabulary tables enter the dataflow kernel pre-resolved: the compiler folds
+the OOV rule (``miss -> n_unique``) into the table before the call, so the
+in-kernel lookup is a pure partitionable gather.
+
+Tiling: block columns are the natural buffer widths (the packer already
+handles sub-128 lanes); block rows are multiples of 8 (sublanes); the grid
+streams row blocks — the paper's batch-of-rows FIFO granularity.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+# ---------------------------------------------------------------------------
+# Stage-A: one fused stateless chain as one kernel (fallback path)
+# ---------------------------------------------------------------------------
+
+def make_fused_stage(chain_fn, *, in_dtype, out_dtype, hex_width: int = 0,
+                     block_rows: int = 256, block_cols: int = 512,
+                     interpret: bool = True):
+    """Build a jit-compatible fn: x -> fused(x).
+
+    chain_fn: elementwise block function. For hex inputs it receives the
+    (w, br, bc) uint8 block and must fold the leading digit axis itself.
+    """
+
+    def kernel(x_ref, o_ref):
+        o_ref[...] = chain_fn(x_ref[...]).astype(o_ref.dtype)
+
+    @functools.partial(jax.jit, static_argnames=())
+    def run(x):
+        if hex_width:
+            w, rows, cols = x.shape
+            assert w == hex_width, (x.shape, hex_width)
+        else:
+            rows, cols = x.shape
+        br = min(block_rows, _round_up(rows, 8))
+        bc = min(block_cols, _round_up(cols, 128))
+        rp, cp = _round_up(rows, br), _round_up(cols, bc)
+        # pad to block multiples (padding lanes carry zeros; sliced off below)
+        if hex_width:
+            xp = jnp.pad(x, ((0, 0), (0, rp - rows), (0, cp - cols)))
+            in_spec = pl.BlockSpec((hex_width, br, bc), lambda i, j: (0, i, j))
+        else:
+            xp = jnp.pad(x, ((0, rp - rows), (0, cp - cols)))
+            in_spec = pl.BlockSpec((br, bc), lambda i, j: (i, j))
+        grid = (rp // br, cp // bc)
+        out = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[in_spec],
+            out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((rp, cp), out_dtype),
+            interpret=interpret,
+        )(xp)
+        return out[:rows, :cols]
+
+    return run
+
+
+def vmem_bytes_estimate(in_dtype, out_dtype, hex_width: int,
+                        block_rows: int, block_cols: int) -> int:
+    """Planner helper: VMEM working set claimed by one grid step."""
+    in_b = np.dtype(in_dtype).itemsize * block_rows * block_cols * (hex_width or 1)
+    out_b = np.dtype(out_dtype).itemsize * block_rows * block_cols
+    return 2 * (in_b + out_b)  # x2 for double buffering
+
+
+# ---------------------------------------------------------------------------
+# Format-aware packer as its own kernel (fallback epilogue)
+# ---------------------------------------------------------------------------
+
+def make_packer(col_widths, in_dtypes, out_dtype, *, pad_cols_to: int = 128,
+                block_rows: int = 256, interpret: bool = True):
+    """Build fn(blocks...) -> packed [rows, padded(sum(col_widths))]."""
+    col_widths = [int(w) for w in col_widths]
+    total = sum(col_widths)
+    padded = _round_up(total, pad_cols_to)
+    offsets = np.cumsum([0] + col_widths).tolist()
+
+    def kernel(*refs):
+        o_ref = refs[-1]
+        o_ref[...] = jnp.zeros_like(o_ref)
+        for k, x_ref in enumerate(refs[:-1]):
+            o_ref[:, offsets[k]:offsets[k + 1]] = x_ref[...].astype(o_ref.dtype)
+
+    def run(*blocks):
+        assert len(blocks) == len(col_widths)
+        rows = blocks[0].shape[0]
+        br = min(block_rows, _round_up(rows, 8))
+        rp = _round_up(rows, br)
+        padded_blocks = [jnp.pad(b, ((0, rp - rows), (0, 0))) for b in blocks]
+        out = pl.pallas_call(
+            kernel,
+            grid=(rp // br,),
+            in_specs=[pl.BlockSpec((br, w), lambda r: (r, 0))
+                      for w in col_widths],
+            out_specs=pl.BlockSpec((br, padded), lambda r: (r, 0)),
+            out_shape=jax.ShapeDtypeStruct((rp, padded), out_dtype),
+            interpret=interpret,
+        )(*padded_blocks)
+        return out[:rows]
+
+    return run
+
+
+# ---------------------------------------------------------------------------
+# The fused per-output streaming dataflow kernel
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StreamInput:
+    """One raw column block streamed through the kernel, row-tiled."""
+
+    name: str
+    width: int
+    dtype: np.dtype
+    hex_width: int = 0  # > 0: digit-major uint8[hex_width, rows, width]
+
+
+@dataclasses.dataclass(frozen=True)
+class TableInput:
+    """One frozen, OOV-resolved vocab table staged whole per grid step."""
+
+    vocab_id: str
+    capacity: int
+
+
+@dataclasses.dataclass(frozen=True)
+class TileStep:
+    """One operator application inside the kernel body.
+
+    kind:
+      "map"    — unary per-tile fn (fused elementwise chain, hex fold,
+                 one-hot expansion); ``fn(tile) -> tile``.
+      "join"   — binary per-tile fn (Cartesian cross); ``fn(a, b) -> tile``.
+      "lookup" — gather through ``tables[table]`` (rank lookup; the OOV rule
+                 is pre-folded into the table, so a miss gathers n_unique).
+    """
+
+    kind: str
+    out: str
+    args: tuple
+    fn: Optional[Callable] = None
+    table: int = -1
+
+
+def make_output_dataflow(inputs: Sequence[StreamInput],
+                         tables: Sequence[TableInput],
+                         steps: Sequence[TileStep],
+                         terminals: Sequence[tuple],
+                         out_dtype, *, pad_cols_to: int = 1,
+                         block_rows: int = 256, interpret: bool = True):
+    """Build fn(*sources, *tables) -> packed [rows, padded(sum widths)].
+
+    ``terminals`` is the ordered list of ``(buffer_name, width)`` pairs the
+    packer epilogue writes; names refer to stream inputs or step outputs.
+    The returned callable issues exactly ONE ``pallas_call``.
+    """
+    inputs = list(inputs)
+    tables = list(tables)
+    steps = list(steps)
+    terminals = [(str(n), int(w)) for n, w in terminals]
+    total = sum(w for _, w in terminals)
+    padded = _round_up(max(total, 1), max(pad_cols_to, 1))
+    offsets = np.cumsum([0] + [w for _, w in terminals]).tolist()
+    n_src = len(inputs)
+
+    def kernel(*refs):
+        src_refs, tbl_refs, o_ref = refs[:n_src], refs[n_src:-1], refs[-1]
+        env = {inp.name: r[...] for inp, r in zip(inputs, src_refs)}
+        for st in steps:
+            if st.kind == "map":
+                env[st.out] = st.fn(env[st.args[0]])
+            elif st.kind == "join":
+                env[st.out] = st.fn(env[st.args[0]], env[st.args[1]])
+            elif st.kind == "lookup":
+                tbl = tbl_refs[st.table][...]  # (1, capacity), OOV-resolved
+                x = env[st.args[0]]
+                safe = jnp.clip(x, 0, tbl.shape[-1] - 1)
+                env[st.out] = jnp.take(tbl[0], safe.reshape(-1),
+                                       axis=0).reshape(x.shape)
+            else:
+                raise NotImplementedError(st.kind)
+        o_ref[...] = jnp.zeros_like(o_ref)
+        for (name, w), off in zip(terminals, offsets):
+            o_ref[:, off:off + w] = env[name].astype(o_ref.dtype)
+
+    def run(*arrays):
+        assert len(arrays) == n_src + len(tables), (len(arrays), n_src)
+        srcs, tbls = arrays[:n_src], arrays[n_src:]
+        rows = srcs[0].shape[1] if inputs[0].hex_width else srcs[0].shape[0]
+        br = min(block_rows, _round_up(rows, 8))
+        rp = _round_up(rows, br)
+        padded_srcs, in_specs = [], []
+        for inp, x in zip(inputs, srcs):
+            if inp.hex_width:
+                padded_srcs.append(jnp.pad(x, ((0, 0), (0, rp - rows), (0, 0))))
+                in_specs.append(pl.BlockSpec((inp.hex_width, br, inp.width),
+                                             lambda r: (0, r, 0)))
+            else:
+                padded_srcs.append(jnp.pad(x, ((0, rp - rows), (0, 0))))
+                in_specs.append(pl.BlockSpec((br, inp.width),
+                                             lambda r: (r, 0)))
+        for t, a in zip(tables, tbls):
+            assert a.shape == (1, t.capacity), (a.shape, t.capacity)
+            in_specs.append(pl.BlockSpec((1, t.capacity), lambda r: (0, 0)))
+        out = pl.pallas_call(
+            kernel,
+            grid=(rp // br,),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((br, padded), lambda r: (r, 0)),
+            out_shape=jax.ShapeDtypeStruct((rp, padded), out_dtype),
+            interpret=interpret,
+        )(*padded_srcs, *tbls)
+        return out[:rows]
+
+    return run

@@ -11,9 +11,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dataflow as _dataflow
 from repro.kernels import embedding_bag as _bag
-from repro.kernels import fused_stateless as _fused
-from repro.kernels import packer_kernel as _packer
 from repro.kernels import vocab as _vocab
 
 
@@ -25,9 +24,19 @@ def fused_stage(chain_fn, *, in_dtype, out_dtype, hex_width=0,
                 block_rows=256, block_cols=512, interpret=None):
     if interpret is None:
         interpret = default_interpret()
-    return _fused.make_fused_stage(
+    return _dataflow.make_fused_stage(
         chain_fn, in_dtype=in_dtype, out_dtype=out_dtype, hex_width=hex_width,
         block_rows=block_rows, block_cols=block_cols, interpret=interpret)
+
+
+def output_dataflow(inputs, tables, steps, terminals, out_dtype, *,
+                    pad_cols_to=1, block_rows=256, interpret=None):
+    """One PackOutput's full streaming program as a single Pallas kernel."""
+    if interpret is None:
+        interpret = default_interpret()
+    return jax.jit(_dataflow.make_output_dataflow(
+        inputs, tables, steps, terminals, out_dtype,
+        pad_cols_to=pad_cols_to, block_rows=block_rows, interpret=interpret))
 
 
 @functools.partial(jax.jit, static_argnames=("capacity", "partitions", "interpret"))
@@ -50,7 +59,7 @@ def packer(col_widths, in_dtypes, out_dtype, *, pad_cols_to=128,
            block_rows=256, interpret=None):
     if interpret is None:
         interpret = default_interpret()
-    return jax.jit(_packer.make_packer(
+    return jax.jit(_dataflow.make_packer(
         col_widths, in_dtypes, out_dtype, pad_cols_to=pad_cols_to,
         block_rows=block_rows, interpret=interpret))
 

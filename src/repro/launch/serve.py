@@ -2,6 +2,10 @@
 
 Local smoke run: PYTHONPATH=src python -m repro.launch.serve \
     --arch mamba2_370m --reduced --batch 4 --prompt-len 32 --max-new 16
+
+``--metrics-file PATH`` exports the run's counters in Prometheus text
+format for a node_exporter textfile collector (ETL-fed launchers export
+their per-stage StageStats the same way; see ``launch/train.py``).
 """
 
 from __future__ import annotations
@@ -12,8 +16,16 @@ import jax
 import numpy as np
 
 from repro.configs.registry import get_config, get_reduced
+from repro.etl_runtime import metrics as metrics_lib
 from repro.models.api import build_model
 from repro.serving.decode import generate
+
+
+def export_metrics(path: str, *, counters: dict, arch: str) -> None:
+    """Write serving counters to ``path`` in Prometheus text format."""
+    text = metrics_lib.counters_to_prometheus(
+        counters, prefix="repro_serve", labels={"arch": arch})
+    metrics_lib.write_metrics_file(path, text)
 
 
 def main(argv=None):
@@ -24,6 +36,8 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--metrics-file", default="",
+                    help="write Prometheus-style text counters here")
     args = ap.parse_args(argv)
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
@@ -40,6 +54,14 @@ def main(argv=None):
     print(f"[serve] arch={cfg.name} prefill={stats.prefill_s:.3f}s "
           f"decode={stats.decode_s:.3f}s ({stats.tokens_per_s:,.1f} tok/s)")
     print("[serve] first sequence:", toks[0][:16].tolist())
+    if args.metrics_file:
+        export_metrics(args.metrics_file, arch=cfg.name, counters={
+            "prefill_seconds_total": stats.prefill_s,
+            "decode_seconds_total": stats.decode_s,
+            "generated_tokens_total": args.batch * args.max_new,
+            "sequences_total": args.batch,
+        })
+        print(f"[serve] metrics written to {args.metrics_file}")
 
 
 if __name__ == "__main__":

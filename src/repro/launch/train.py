@@ -65,6 +65,8 @@ def main(argv=None):
                     choices=["numpy", "jnp", "pallas"])
     ap.add_argument("--watchdog-s", type=float, default=0.0)
     ap.add_argument("--max-restarts", type=int, default=2)
+    ap.add_argument("--metrics-file", default="",
+                    help="write executor StageStats as Prometheus text here")
     args = ap.parse_args(argv)
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
@@ -82,10 +84,14 @@ def main(argv=None):
             state_shapes = jax.eval_shape(
                 lambda: TrainState.create(model.init(jax.random.key(0)), tcfg))
             batch_shapes = input_specs(cfg, shape)
+            # batches come from the streaming executor and are consumed
+            # exactly once, already placed in the step's in_shardings layout
+            # — donate them so the handoff is zero-copy end to end
             step_fn, state_spec = jit_train_step(
                 make_train_step(model.loss, tcfg), mesh, state_shapes,
                 batch_shapes, fsdp=tcfg.fsdp,
-                n_experts=cfg.moe.n_experts if cfg.moe else 0)
+                n_experts=cfg.moe.n_experts if cfg.moe else 0,
+                donate_batch=True)
 
             def make_state():
                 return TrainState.create(model.init(jax.random.key(0)), tcfg)
@@ -128,6 +134,13 @@ def main(argv=None):
                       f"busy={s['busy_s']:.2f}s wait_in={s['wait_in_s']:.2f}s "
                       f"wait_out={s['wait_out_s']:.2f}s "
                       f"occ={s['occupancy']:.1%}")
+            if args.metrics_file:
+                from repro.etl_runtime import metrics as metrics_lib
+                metrics_lib.write_metrics_file(
+                    args.metrics_file,
+                    metrics_lib.stats_to_prometheus(
+                        stats, labels={"arch": cfg.name}))
+                print(f"[train] metrics written to {args.metrics_file}")
             return final
 
         return run

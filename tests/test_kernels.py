@@ -78,6 +78,49 @@ def test_packer_sweep(widths, out_dtype, rows):
     assert got.shape[1] % 128 == 0
 
 
+@pytest.mark.parametrize("rows", [8, 100, 257])
+@pytest.mark.parametrize("pad_to", [8, 32])
+def test_output_dataflow_sweep(rows, pad_to):
+    """One streaming kernel = chain + hex decode + lookup + pack epilogue."""
+    from repro.kernels.dataflow import StreamInput, TableInput, TileStep
+
+    dense = (RNG.normal(size=(rows, 5)) * 10).astype(np.float32)
+    digits = RNG.integers(0, 16, size=(4, rows, 3))
+    hexraw = HEXMAP[digits]
+    cap = 64
+    vals = RNG.integers(0, cap, size=(500,)).astype(np.int32)
+    vg = O.VocabGen(cap)
+    table = vg.finalize(vg.update(vg.init_state(), vals, 0))
+    n_uniq = O.VocabGen.n_unique(table)
+
+    clamp, log, mod = O.Clamp(0.0), O.Logarithm(), O.Modulus(cap)
+    dense_chain = lambda v: log.jnp_expr(clamp.jnp_expr(v))
+    hex_chain = lambda v: mod.jnp_expr(ref.hex2int_digit_major(v))
+
+    fn = ops.output_dataflow(
+        inputs=[StreamInput("d", 5, np.dtype(np.float32)),
+                StreamInput("h", 3, np.dtype(np.uint8), hex_width=4)],
+        tables=[TableInput("v0", cap)],
+        steps=[TileStep("map", "dlog", ("d",), fn=dense_chain),
+               TileStep("map", "hid", ("h",), fn=hex_chain),
+               TileStep("lookup", "hrank", ("hid",), table=0)],
+        terminals=[("dlog", 5), ("hrank", 3)],
+        out_dtype=np.float32, pad_cols_to=pad_to, interpret=True)
+    # the compiler folds OOV into the table before the call
+    resolved = np.where(table >= 0, table, n_uniq).astype(np.int32)
+    got = np.asarray(fn(jnp.asarray(dense), jnp.asarray(hexraw),
+                        jnp.asarray(resolved).reshape(1, -1)))
+
+    want_d = np.asarray(dense_chain(jnp.asarray(dense)))
+    want_ids = mod.numpy(O.Hex2Int(4).numpy(np.moveaxis(hexraw, 0, -1)))
+    want_r = np.asarray(ref.vocab_lookup(jnp.asarray(want_ids),
+                                         jnp.asarray(table), n_uniq))
+    want = np.asarray(ref.pack_blocks(
+        [jnp.asarray(want_d), jnp.asarray(want_r)], np.float32, pad_to))
+    assert got.shape == (rows, -(-8 // pad_to) * pad_to)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
 @pytest.mark.parametrize("vocab,dim,batch,nnz,parts", [
     (64, 16, 33, 5, 4), (128, 32, 8, 1, 1), (256, 8, 100, 7, 8)])
 def test_embedding_bag_sweep(vocab, dim, batch, nnz, parts):

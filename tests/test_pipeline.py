@@ -118,6 +118,9 @@ def test_semantics_validation():
         BatchingPolicy(0)
     with pytest.raises(ValueError):
         OrderingPolicy("fifo", reorder_window=4)
+    with pytest.raises(ValueError):  # window < 2 cannot reorder anything
+        OrderingPolicy("bucket_by_length", reorder_window=1)
+    assert OrderingPolicy("bucket_by_length", reorder_window=2).reorder_window == 2
 
 
 def test_schema_validation_catches_bad_batch():
@@ -136,6 +139,88 @@ def test_resource_summary():
     assert rs["n_vocabs"] == 1
     assert rs["hbm_table_bytes"] == 4 * 2 ** 19 or rs["vmem_table_bytes"] > 0
     assert rs["flops_per_row"] > 0
+
+
+# ---------------- fused streaming dataflow (plan-level fusion) ----------------
+
+
+def _assert_outputs_match(want, got, msg):
+    for k in want:
+        a, b = np.asarray(want[k]), np.asarray(got[k])
+        if np.issubdtype(a.dtype, np.integer):
+            np.testing.assert_array_equal(a, b, err_msg=f"{msg}/{k}")
+        else:
+            np.testing.assert_allclose(a, b, rtol=1e-5, err_msg=f"{msg}/{k}")
+
+
+@pytest.mark.parametrize("which", ["I", "II", "III"])
+def test_fused_dataflow_matches_numpy_oracle(which, raw_batch):
+    """Fused and staged pallas lowerings both pin to the numpy oracle."""
+    ref = paper_pipeline(which, modulus=4096, small_vocab=2048,
+                         large_vocab=8192).compile(backend="numpy")
+    ref.fit(_fit_batches())
+    want = ref(raw_batch)
+    for fuse in ["auto", "off"]:
+        p = paper_pipeline(which, modulus=4096, small_vocab=2048,
+                           large_vocab=8192).compile(backend="pallas",
+                                                     fuse=fuse)
+        p.fit(_fit_batches())
+        _assert_outputs_match(want, p(raw_batch), f"{which}/fuse={fuse}")
+        paths = {v["path"] for v in p.lowering_report().values()}
+        assert paths == ({"fused"} if fuse == "auto" else {"staged"})
+
+
+def test_fused_single_pallas_call_per_output(raw_batch):
+    """The acceptance invariant: one streaming kernel per PackOutput."""
+    p = paper_pipeline("II", small_vocab=2048).compile(backend="pallas")
+    p.fit(_fit_batches())
+    assert p.traced_pallas_call_count(raw_batch) == len(p.plan.pack) == 3
+    staged = paper_pipeline("II", small_vocab=2048).compile(backend="pallas",
+                                                            fuse="off")
+    staged.fit(_fit_batches())
+    assert staged.traced_pallas_call_count(raw_batch) > len(staged.plan.pack)
+
+
+def test_fused_fallback_hbm_vocab(raw_batch):
+    """HBM-resident tables route their output through the staged path."""
+    p = paper_pipeline("III", large_vocab=2 ** 21).compile(backend="pallas")
+    rep = p.lowering_report()
+    assert rep["sparse"]["path"] == "staged"
+    assert "hbm" in rep["sparse"]["reason"]
+    assert rep["dense"]["path"] == "fused" and rep["label"]["path"] == "fused"
+    # the mixed fused/staged program still matches the oracle end to end
+    ref = paper_pipeline("III", large_vocab=2 ** 21).compile(backend="numpy")
+    for c in (p, ref):
+        c.fit(_fit_batches())
+    _assert_outputs_match(ref(raw_batch), p(raw_batch), "hbm-fallback")
+
+
+def test_fused_cross_pipeline_single_kernel():
+    """A cross (binary join) fuses into the same streaming kernel."""
+    def build():
+        p = Pipeline(Schema.criteo_kaggle())
+        a = p.sparse("sparse_0") | O.Hex2Int(8) | O.Modulus(128)
+        b = p.sparse("sparse_1") | O.Hex2Int(8) | O.Modulus(128)
+        p.output("crossed", [p.cross(a, b, m=997)], dtype=np.int32)
+        return p
+    raw = next(synth.dataset_batches("I", rows=100, batch_size=100))
+    fused = build().compile(backend="pallas")
+    assert fused.lowering_report()["crossed"]["path"] == "fused"
+    assert fused.traced_pallas_call_count(raw) == 1
+    _assert_outputs_match(build().compile(backend="numpy")(raw),
+                          fused(raw), "cross")
+
+
+def test_fused_lm_token_pipeline():
+    raw = next(synth.lm_event_batches(64, rows=32, batch_size=32))
+    fused = lm_token_pipeline(seq_len=64, vocab_size=1000).compile(
+        backend="pallas")
+    assert all(v["path"] == "fused"
+               for v in fused.lowering_report().values())
+    assert fused.traced_pallas_call_count(raw) == 2
+    ref = lm_token_pipeline(seq_len=64, vocab_size=1000).compile(
+        backend="numpy")
+    _assert_outputs_match(ref(raw), fused(raw), "lm")
 
 
 def test_frequency_filter_backend_equality(raw_batch):

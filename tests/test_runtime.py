@@ -66,6 +66,18 @@ def test_credit_queue_drops_oldest_first():
     assert q.get() == "mid" and q.get() == "new"  # "old" was the casualty
 
 
+def test_credit_queue_drop_oldest_drains_after_shrink():
+    """A shrunk capacity drains the backlog on the next freshness put."""
+    stop = threading.Event()
+    q = CreditQueue(4, stop)
+    for i in range(4):
+        q.put(i)
+    q.set_capacity(2)
+    assert q.put(9, drop_oldest=True) == 3  # sheds down to the new bound
+    assert len(q) == 2
+    assert q.get() == 3 and q.get() == 9
+
+
 def test_credit_queue_put_is_stop_aware():
     """A full queue can never deadlock shutdown (the seed sentinel bug)."""
     stop = threading.Event()
@@ -139,6 +151,19 @@ def test_stop_returns_promptly_mid_stream():
     assert list(it) == []                   # consumer unblocks too
 
 
+def test_stage_error_surfaces_to_consumer():
+    """A raising stage fn stops the pipeline and re-raises, never hangs."""
+    def bad_pipe(b):
+        raise ValueError("malformed batch")
+
+    ex = StreamingExecutor(bad_pipe, synth.dataset_batches(
+        "I", rows=2000, batch_size=1000), credits=2)
+    with pytest.raises(RuntimeError, match="stage failed") as ei:
+        list(ex)
+    assert isinstance(ei.value.__cause__, ValueError)
+    assert ex.join(timeout=2.0)
+
+
 def test_stop_without_consumer_is_prompt():
     """Seed deadlock shape: producer blocked on a full queue at stop time."""
     ex = StreamingExecutor(_pipe(), synth.dataset_batches(
@@ -204,6 +229,110 @@ def test_straggler_skip():
     got = list(ex)
     assert len(got) == 2  # both batches eventually arrive
     assert ex.stats.skipped_straggler >= 1  # but the stall was detected
+
+
+# ---------------- ordering: bucket_by_length reorder window ----------------
+
+def test_bucket_by_length_sorts_within_window():
+    """The order stage emits ascending length inside each bounded window."""
+    lens = [5, 1, 3, 2, 6, 4]
+
+    def src():
+        for n in lens:
+            yield {"tokens": np.arange(1, n + 1, dtype=np.int32).reshape(1, n)}
+
+    sem = PipelineSemantics(
+        batching=BatchingPolicy(1),
+        ordering=OrderingPolicy("bucket_by_length", reorder_window=3))
+    ex = StreamingExecutor(lambda b: b, src(), semantics=sem, credits=2)
+    got = [int(b["tokens"].shape[1]) for b in ex]
+    # windows [5,1,3] and [2,6,4], each sorted ascending; windows stay FIFO
+    assert got == [1, 3, 5, 2, 4, 6]
+    bd = ex.stats.stage_breakdown()
+    assert "order" in bd and bd["order"]["items"] == len(lens)
+    assert ex.queue_depths().get("sorted") == 0
+
+
+def test_fifo_ordering_has_no_order_stage():
+    ex = StreamingExecutor(_pipe(), synth.dataset_batches(
+        "I", rows=2000, batch_size=1000), credits=2)
+    assert all(len(list(ex)) == 2 for _ in [0])
+    assert "order" not in ex.stats.stages and "sorted" not in ex.queue_depths()
+
+
+# ---------------- adaptive credits (occupancy-sized staging) ----------------
+
+def test_adaptive_credits_grow_when_trainer_starves():
+    """A starving consumer grows the staging budget up to max_credits."""
+    def src(n=20):
+        for i in range(n):
+            yield {"x": np.full((4, 4), i, np.int32)}
+
+    def slow_pipe(b):
+        time.sleep(0.02)  # ETL slower than the (instant) consumer
+        return b
+
+    ex = StreamingExecutor(slow_pipe, src(), credits=2,
+                           adaptive_credits=True, max_credits=4)
+    assert sum(1 for _ in ex) == 20
+    assert ex.current_credits == 4
+    assert ex.stats.credit_grows == 2 and ex.stats.credit_shrinks == 0
+
+
+def test_adaptive_credits_shrink_when_ready_sits_full():
+    """Fast ETL + slow consumer reclaims a previously grown budget."""
+    def src(n=24):
+        for i in range(n):
+            yield {"x": np.full((4, 4), i, np.int32)}
+
+    ex = StreamingExecutor(lambda b: b, src(), credits=2,
+                           adaptive_credits=True, max_credits=4)
+    # simulate a prior grow phase, then consume slowly so the ready queue
+    # refills to capacity before every pop
+    ex.current_credits = 4
+    for q in (ex._packed_q, ex._ready_q):
+        q.set_capacity(4)
+    for _ in ex:
+        time.sleep(0.05)  # ETL (instant) keeps the queue full; no starvation
+    assert ex.stats.credit_shrinks >= 1
+    assert ex.current_credits < 4
+    assert ex.current_credits >= ex.credits  # never below the floor
+
+
+def test_adaptive_credits_disabled_keeps_budget_fixed():
+    def src(n=10):
+        for i in range(n):
+            yield {"x": np.full((4, 4), i, np.int32)}
+
+    ex = StreamingExecutor(lambda b: b, src(), credits=2)
+    list(ex)
+    assert ex.current_credits == 2
+    assert ex.stats.credit_grows == 0 and ex.stats.credit_shrinks == 0
+
+
+# ---------------- Prometheus-style metrics exposition ----------------
+
+def test_stage_stats_prometheus_text(tmp_path):
+    from repro.etl_runtime import metrics as metrics_lib
+
+    ex = StreamingExecutor(_pipe(), synth.dataset_batches(
+        "I", rows=3000, batch_size=1000), credits=2)
+    assert len(list(ex)) == 3
+    text = metrics_lib.stats_to_prometheus(ex.stats, labels={"tenant": "t0"})
+    assert '# TYPE repro_etl_stage_items_total counter' in text
+    assert 'repro_etl_stage_items_total{stage="transform",tenant="t0"} 3' in text
+    assert 'repro_etl_produced_total{tenant="t0"} 3' in text
+    assert 'repro_etl_stage_busy_seconds_total{stage="read"' in text
+    # every emitted sample line parses as  name{labels} float
+    for line in text.strip().splitlines():
+        if line.startswith("#"):
+            continue
+        name_part, value = line.rsplit(" ", 1)
+        float(value)
+        assert name_part.startswith("repro_etl_")
+    p = tmp_path / "metrics.prom"
+    metrics_lib.write_metrics_file(str(p), text)
+    assert p.read_text() == text
 
 
 # ---------------- multi-tenant (weighted-credit policy) ----------------
