@@ -4,7 +4,7 @@ from __future__ import annotations
 
 from benchmarks.common import emit
 from repro.core.pipeline import paper_pipeline
-from repro.data import synth
+from repro.data.source import Source
 from repro.etl_runtime.multitenant import PipelineManager
 
 BATCH = 8192
@@ -18,8 +18,8 @@ def main():
             pipe = paper_pipeline("I", modulus=65536,
                                   batch_size=BATCH).compile(backend="jnp")
             mgr.add(f"p{i}", pipe,
-                    lambda i=i: synth.dataset_batches(
-                        "I", rows=N_BATCHES * BATCH, batch_size=BATCH, seed=i))
+                    Source.synth("I", rows=N_BATCHES * BATCH,
+                                 batch_size=BATCH, seed=i))
         res = mgr.run(n_batches=N_BATCHES)
         total_rows = sum(r.rows for r in res.values())
         wall = max(r.seconds for r in res.values())

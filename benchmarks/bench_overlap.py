@@ -2,16 +2,24 @@
 staged prefetching executor (same ETL, same trainer) — plus the Fig-8-style
 per-stage occupancy breakdown from the executor's stage stats.
 
+Ingest runs through the session facade (``EtlJob`` over a ``Source``); the
+blocking baseline iterates the same Source inline on the critical path.
+
 Emits:
   fig14/blocking, fig14/overlapped           (jnp device ETL)
   fig14/cpu_fed_blocking, fig14/cpu_fed_overlapped  (numpy host ETL — the
       paper's headline regime: slow CPU ETL hidden behind the train step)
   fig8/<stage>                                per-stage breakdown
   fig14/utilization_gain                      overlapped - blocking (pp)
+
+``--steps N`` overrides the batch count (CI smoke: ``--steps 3`` exercises
+the executor path end-to-end without asserting the utilization win, which
+needs enough batches to amortize warmup).
 """
 
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -20,12 +28,11 @@ import numpy as np
 from benchmarks.common import emit
 from repro.configs.base import TrainConfig
 from repro.core.pipeline import paper_pipeline
-from repro.data import synth
-from repro.etl_runtime.runtime import StreamingExecutor
+from repro.data.source import Source
 from repro.models import dlrm
+from repro.session import EtlJob
 from repro.training.train_loop import TrainState, make_train_step
 
-N_BATCHES = 12
 BATCH = 4096
 
 
@@ -34,24 +41,28 @@ def _make_step(cfg, tcfg):
                                    tcfg), donate_argnums=0)
 
 
-def _fresh_pipe(backend):
-    pipe = paper_pipeline("II", small_vocab=8192,
-                          batch_size=BATCH).compile(backend=backend)
-    pipe.fit(synth.dataset_batches("I", rows=8192, batch_size=8192))
-    return pipe
+def _source(n_batches: int) -> Source:
+    return Source.synth("I", rows=n_batches * BATCH, batch_size=BATCH, seed=2)
+
+
+def _fresh_job(backend: str, n_batches: int) -> EtlJob:
+    job = EtlJob(paper_pipeline("II", small_vocab=8192, batch_size=BATCH),
+                 _source(n_batches), backend=backend,
+                 fit_source=Source.synth("I", rows=8192, batch_size=8192))
+    job.fit()
+    return job
 
 
 def _materialize(batch):
     return {k: np.asarray(v) for k, v in batch.items()}
 
 
-def run_blocking(pipe, step, state, *, host_etl):
+def run_blocking(job, step, state, *, host_etl):
     """ETL inline on the critical path (the paper's CPU-GPU mode)."""
     t0 = time.perf_counter()
     train_s = 0.0
-    for raw in synth.dataset_batches("I", rows=N_BATCHES * BATCH,
-                                     batch_size=BATCH, seed=2):
-        batch = pipe(raw)
+    for raw in job.apply_source():
+        batch = job.apply(raw)
         if host_etl:
             batch = _materialize(batch)
         ts = time.perf_counter()
@@ -62,22 +73,27 @@ def run_blocking(pipe, step, state, *, host_etl):
     return train_s / total, total
 
 
-def run_overlapped(pipe, step, state):
+def run_overlapped(job, step, state):
     """Staged prefetching executor: ETL stages overlap the train step."""
-    ex = StreamingExecutor(pipe, synth.dataset_batches(
-        "I", rows=N_BATCHES * BATCH, batch_size=BATCH, seed=2), credits=2)
     t0 = time.perf_counter()
     train_s = 0.0
-    for batch in ex:
-        ts = time.perf_counter()
-        state, m = step(state, batch)
-        jax.block_until_ready(m["loss"])
-        train_s += time.perf_counter() - ts
+    with job.batches() as ex:
+        for batch in ex:
+            ts = time.perf_counter()
+            state, m = step(state, batch)
+            jax.block_until_ready(m["loss"])
+            train_s += time.perf_counter() - ts
     total = time.perf_counter() - t0
-    return train_s / total, total, ex.stats
+    return train_s / total, total, job.stats()
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=12,
+                    help="batches per run (smoke: 3)")
+    args = ap.parse_args(argv)
+    n = args.steps
+
     cfg = dlrm.DLRMConfig(vocab_size=8193, d_emb=32, bot_mlp=(128, 64, 32),
                           top_mlp=(128, 64, 1))
     tcfg = TrainConfig(lr=1e-3)
@@ -87,10 +103,10 @@ def main():
         return TrainState.create(dlrm.init(jax.random.key(0), cfg), tcfg)
 
     # device (jnp) ETL: async dispatch already hides most of it
-    util_block, total_block = run_blocking(_fresh_pipe("jnp"), step,
+    util_block, total_block = run_blocking(_fresh_job("jnp", n), step,
                                            fresh_state(), host_etl=True)
     emit("fig14/blocking", total_block, f"util={util_block:.2%}")
-    util_ov, total_ov, _ = run_overlapped(_fresh_pipe("jnp"), step,
+    util_ov, total_ov, _ = run_overlapped(_fresh_job("jnp", n), step,
                                           fresh_state())
     emit("fig14/overlapped", total_ov,
          f"util={util_ov:.2%}|speedup={total_block / total_ov:.2f}x")
@@ -98,11 +114,11 @@ def main():
     # the paper's Fig-1/14 regime: slow host (numpy) ETL on the critical
     # path vs the same producer overlapped — the utilization gap is the
     # headline effect
-    cpu_block, cpu_block_total = run_blocking(_fresh_pipe("numpy"), step,
+    cpu_block, cpu_block_total = run_blocking(_fresh_job("numpy", n), step,
                                               fresh_state(), host_etl=False)
     emit("fig14/cpu_fed_blocking", cpu_block_total,
          f"util={cpu_block:.2%}")
-    cpu_ov, cpu_ov_total, stats = run_overlapped(_fresh_pipe("numpy"), step,
+    cpu_ov, cpu_ov_total, stats = run_overlapped(_fresh_job("numpy", n), step,
                                                  fresh_state())
     emit("fig14/cpu_fed_overlapped", cpu_ov_total,
          f"util={cpu_ov:.2%}|speedup={cpu_block_total / cpu_ov_total:.2f}x")
@@ -118,8 +134,9 @@ def main():
     gain_pp = (cpu_ov - cpu_block) * 100
     emit("fig14/utilization_gain", cpu_ov_total,
          f"overlap_gain={gain_pp:.1f}pp")
-    assert cpu_ov > cpu_block, (
-        f"overlap must beat blocking: {cpu_ov:.2%} vs {cpu_block:.2%}")
+    if n >= 8:  # smoke runs are too short to assert the win
+        assert cpu_ov > cpu_block, (
+            f"overlap must beat blocking: {cpu_ov:.2%} vs {cpu_block:.2%}")
 
 
 if __name__ == "__main__":

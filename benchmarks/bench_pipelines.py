@@ -10,11 +10,11 @@ measurable on the Criteo-shaped workload (dataset I).
 
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import block, emit, timeit
 from repro.core.pipeline import paper_pipeline
 from repro.data import synth
+from repro.data.source import Source
+from repro.session import EtlJob
 
 ROWS = {"I": 100_000, "II": 20_000}  # II is ~6x wider per row
 
@@ -34,20 +34,22 @@ def bytes_per_row(which: str) -> int:
 def main():
     for ds in ["I", "II"]:
         rows = ROWS[ds]
-        raw = next(synth.dataset_batches(ds, rows=rows, batch_size=rows))
-        fit = lambda: synth.dataset_batches(ds, rows=20_000, batch_size=10_000)
+        raw = next(iter(Source.synth(ds, rows=rows, batch_size=rows)))
         bpr = bytes_per_row(ds)
         for which in ["I", "II", "III"]:
             times = {}
             for label, backend, fuse in VARIANTS:
                 if backend == "pallas" and ds == "II":
                     continue  # interpret-mode cost not informative at width 504
-                p = paper_pipeline(which, schema=synth.dataset_schema(ds),
+                job = EtlJob(
+                    paper_pipeline(which, schema=synth.dataset_schema(ds),
                                    small_vocab=8192, large_vocab=524288,
-                                   modulus=65536).compile(backend=backend,
-                                                          fuse=fuse)
-                p.fit(fit())
-                t = timeit(lambda: block(p(raw)), warmup=1, iters=2)
+                                   modulus=65536),
+                    backend=backend, fuse=fuse,
+                    fit_source=Source.synth(ds, rows=20_000,
+                                            batch_size=10_000))
+                job.fit()
+                t = timeit(lambda: block(job.apply(raw)), warmup=1, iters=2)
                 times[label] = t
                 emit(f"fig13_15_16/D-{ds}+P-{which}/{label}", t,
                      f"{rows / t / 1e6:.2f}Mrows_s|{rows * bpr / t / 1e6:.0f}MB_s")

@@ -7,25 +7,26 @@ analogue).
 
 import time
 
-import numpy as np
-
 from repro.core.pipeline import paper_pipeline
-from repro.data import synth
+from repro.data.source import Source
 from repro.etl_runtime.multitenant import PipelineManager
+from repro.session import EtlJob
 
 
 def main():
     mgr = PipelineManager()
-    # heterogeneous tenants: stateless, small-vocab, large-vocab
+    # heterogeneous tenants: stateless, small-vocab, large-vocab — each a
+    # declarative (pipeline, Source) pair the manager turns into an EtlJob
+    fit_src = Source.synth("I", rows=8192, batch_size=8192)
     for name, which in [("stateless", "I"), ("vocab8k", "II"),
                         ("vocab512k", "III")]:
-        pipe = paper_pipeline(which, small_vocab=8192, large_vocab=524288,
-                              batch_size=4096).compile(backend="jnp")
-        pipe.fit(synth.dataset_batches("I", rows=8192, batch_size=8192))
-        mgr.add(name, pipe,
-                lambda name=name: synth.dataset_batches(
-                    "I", rows=4 * 4096, batch_size=4096,
-                    seed=hash(name) % 100))
+        job = EtlJob(paper_pipeline(which, small_vocab=8192,
+                                    large_vocab=524288, batch_size=4096),
+                     backend="jnp", fit_source=fit_src)
+        job.fit()
+        mgr.add(name, job.compiled,
+                Source.synth("I", rows=4 * 4096, batch_size=4096,
+                             seed=hash(name) % 100))
 
     res = mgr.run(n_batches=4)
     for name, r in res.items():
@@ -37,8 +38,7 @@ def main():
                               batch_size=4096).compile(backend="jnp")
     t0 = time.perf_counter()
     mgr.swap("stateless", new_pipe,
-             lambda: synth.dataset_batches("I", rows=2 * 4096,
-                                           batch_size=4096, seed=5))
+             Source.synth("I", rows=2 * 4096, batch_size=4096, seed=5))
     print(f"[swap] reconfigured tenant in {1e3*(time.perf_counter()-t0):.2f}ms"
           " (compiled-executable swap; no recompilation)")
     res = mgr.run(n_batches=2)

@@ -1,10 +1,11 @@
-"""Quickstart: compose, compile, fit, and run a streaming ETL pipeline.
+"""Quickstart: compose a pipeline, declare a Source, run it as an EtlJob.
 
     PYTHONPATH=src python examples/quickstart.py
 
 Builds the paper's Pipeline II on a Criteo-like schema with the Python
-template interface, fits the vocabulary on a stream, and transforms a raw
-batch into training-ready tensors on all three backends.
+template interface, fits the vocabulary on a declarative Source, and
+transforms a raw batch into training-ready tensors on all three backends
+through the session facade.
 """
 
 import numpy as np
@@ -13,7 +14,8 @@ from repro.core.operators import Clamp, FillMissing, Hex2Int, Logarithm, Modulus
 from repro.core.dag import Vocab
 from repro.core.pipeline import Pipeline
 from repro.core.schema import Schema
-from repro.data import synth
+from repro.data.source import Source
+from repro.session import EtlJob
 
 
 def main():
@@ -29,19 +31,19 @@ def main():
     p.output("sparse", [sparse], dtype=np.int32, pad_cols_to=128)
     p.output("label", [p.label("label")], dtype=np.float32, squeeze=True)
 
+    # -- declare ingest once; the job owns compile -> fit -> apply ---------
+    raw = next(iter(Source.synth("I", rows=4096, batch_size=4096, seed=9)))
     for backend in ["numpy", "jnp", "pallas"]:
-        compiled = p.compile(backend=backend)
-        # fit phase: learn vocab tables from a stream (keyed reduction)
-        compiled.fit(synth.dataset_batches("I", rows=8192, batch_size=4096))
-        raw = next(synth.dataset_batches("I", rows=4096, batch_size=4096,
-                                         seed=9))
-        out = compiled(raw)
+        job = EtlJob(p, backend=backend,
+                     fit_source=Source.synth("I", rows=8192, batch_size=4096))
+        job.fit()  # fit phase: learn vocab tables from the stream
+        out = job.apply(raw)
         print(f"[{backend:6s}] " + "  ".join(
             f"{k}:{tuple(np.asarray(v).shape)}:{np.asarray(v).dtype}"
             for k, v in sorted(out.items())))
-        print(f"          n_unique={list(compiled.state.n_unique.values())} "
-              f"version={compiled.state.version} "
-              f"resources={compiled.resource_summary()}")
+        print(f"          n_unique={list(job.state.n_unique.values())} "
+              f"version={job.state.version} "
+              f"resources={job.compiled.resource_summary()}")
 
 
 if __name__ == "__main__":

@@ -3,23 +3,24 @@
     PYTHONPATH=src python examples/train_dlrm_e2e.py [--steps 300]
 
 Trains a ~100M-parameter DLRM for a few hundred steps on a continuously
-generated Criteo-like event stream.  The ETL engine (Pipeline II) runs in the
-producer thread, double-buffered against the trainer with credit
-backpressure; the script reports trainer utilization with and without the
-overlap — the paper's headline effect (Fig 14 / §4.4).
+generated Criteo-like event stream.  Ingest is declarative: a ``Source``
+names the stream and an ``EtlJob`` owns compile -> fit -> the staged
+prefetching executor (Pipeline II runs in the producer threads,
+double-buffered against the trainer with credit backpressure); the script
+reports trainer utilization with and without the overlap — the paper's
+headline effect (Fig 14 / §4.4).
 """
 
 import argparse
 import time
 
 import jax
-import numpy as np
 
 from repro.configs.base import TrainConfig
 from repro.core.pipeline import paper_pipeline
-from repro.data import synth
-from repro.etl_runtime.runtime import StreamingExecutor
+from repro.data.source import Source
 from repro.models import dlrm
+from repro.session import EtlJob
 from repro.training.train_loop import (LoopConfig, TrainState, make_train_step,
                                        train_loop)
 
@@ -38,12 +39,16 @@ def main():
                           top_mlp=(512, 256, 128, 1))
     print(f"[e2e] DLRM params: {cfg.param_count():,}")
 
-    pipe = paper_pipeline("II", small_vocab=args.vocab,
-                          batch_size=args.batch).compile(backend="jnp")
+    job = EtlJob(
+        paper_pipeline("II", small_vocab=args.vocab, batch_size=args.batch),
+        Source.synth("I", rows=args.steps * args.batch,
+                     batch_size=args.batch, seed=11),
+        backend="jnp",
+        fit_source=Source.synth("I", rows=50_000, batch_size=10_000))
     t0 = time.perf_counter()
-    pipe.fit(synth.dataset_batches("I", rows=50_000, batch_size=10_000))
+    job.fit()
     print(f"[e2e] vocab fit in {time.perf_counter()-t0:.2f}s; "
-          f"n_unique={max(pipe.state.n_unique.values())}")
+          f"n_unique={max(job.state.n_unique.values())}")
 
     tcfg = TrainConfig(lr=1e-3)
     state = TrainState.create(dlrm.init(jax.random.key(0), cfg), tcfg)
@@ -54,17 +59,15 @@ def main():
     step = jax.jit(make_train_step(lambda p, b: dlrm.loss_fn(p, b, cfg),
                                    tcfg), donate_argnums=donate)
 
-    source = synth.dataset_batches("I", rows=args.steps * args.batch,
-                                   batch_size=args.batch, seed=11)
-    ex = StreamingExecutor(pipe, source, credits=2)
     t0 = time.perf_counter()
-    state = train_loop(state, step, ex,
-                       LoopConfig(total_steps=args.steps,
-                                  ckpt_dir=args.ckpt_dir,
-                                  ckpt_every=100 if args.ckpt_dir else 0,
-                                  log_every=50))
+    with job.batches() as ex:
+        state = train_loop(state, step, ex,
+                           LoopConfig(total_steps=args.steps,
+                                      ckpt_dir=args.ckpt_dir,
+                                      ckpt_every=100 if args.ckpt_dir else 0,
+                                      log_every=50))
     wall = time.perf_counter() - t0
-    s = ex.stats
+    s = job.stats()
     rows = args.steps * args.batch
     train_s = wall - s.consumer_wait_s
     print(f"[e2e] {args.steps} steps / {rows:,} rows in {wall:.1f}s "

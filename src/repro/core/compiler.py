@@ -126,7 +126,7 @@ class CompiledPipeline:
 
     def __init__(self, plan: ExecutionPlan, graph, backend: str = "jnp", *,
                  interpret: Optional[bool] = None, name: str = "pipeline",
-                 fuse: str = "auto"):
+                 fuse: str = "auto", semantics=None):
         if backend not in ("numpy", "jnp", "pallas"):
             raise ValueError(f"unknown backend {backend!r}")
         if fuse not in ("auto", "off"):
@@ -136,6 +136,9 @@ class CompiledPipeline:
         self.backend = backend
         self.name = name
         self.fuse = fuse
+        # the template's PipelineSemantics ride along so the runtime (and
+        # EtlJob) see the declared freshness/ordering/batching contract
+        self.semantics = semantics
         self.interpret = kops.default_interpret() if interpret is None else interpret
         # per-output fused programs: only the pallas backend has a tile
         # codegen; jnp relies on XLA fusion and numpy is the oracle
@@ -153,6 +156,8 @@ class CompiledPipeline:
         self._resolved_cache: tuple = (-1, {})
         self._staged_cache: tuple = (-1, ({}, {}))
         self._staged_vocab_ids: list[str] = []
+        # fit closure source buffers, computed once (used by all fit paths)
+        self._fit_bufs = plan.fit_source_buffers()
         if backend != "numpy":
             self._apply_fn = self._build_apply()
             self._apply_jit = jax.jit(self._apply_fn)
@@ -162,14 +167,14 @@ class CompiledPipeline:
     # source assembly: raw columnar batch -> source buffers
     # ------------------------------------------------------------------
 
-    def _gather_sources(self, raw: dict) -> dict:
+    def _gather_sources(self, raw: dict, buffers=None) -> dict:
         """numpy backend: assemble column blocks on the host.
 
         jnp/pallas backends assemble INSIDE the jit (§Perf E1): the host-side
         np.stack/transpose of the hex columns cost ~1/3 of apply wall time;
         on device it fuses into the first kernel's read."""
         out = {}
-        for buf in self.plan.source_buffers:
+        for buf in (self.plan.source_buffers if buffers is None else buffers):
             node = self._source_nodes[buf]
             feats = node.features
             if feats[0].seq_len:  # token column: (rows, seq)
@@ -182,18 +187,18 @@ class CompiledPipeline:
                 out[buf] = np.stack(cols, axis=1)
         return out
 
-    def _raw_columns(self, raw: dict) -> dict:
+    def _raw_columns(self, raw: dict, buffers=None) -> dict:
         """Pass-through of the raw columns needed by the source buffers."""
         cols = {}
-        for buf in self.plan.source_buffers:
+        for buf in (self.plan.source_buffers if buffers is None else buffers):
             for f in self._source_nodes[buf].features:
                 cols[f.name] = np.asarray(raw[f.name])
         return cols
 
-    def _assemble_sources_jnp(self, cols: dict) -> dict:
+    def _assemble_sources_jnp(self, cols: dict, buffers=None) -> dict:
         """Device-side source assembly (traced; part of the jit program)."""
         out = {}
-        for buf in self.plan.source_buffers:
+        for buf in (self.plan.source_buffers if buffers is None else buffers):
             node = self._source_nodes[buf]
             feats = node.features
             if feats[0].seq_len:
@@ -386,8 +391,10 @@ class CompiledPipeline:
                 builds[vf.vocab_id] = (
                     lambda vals, vf=vf: kref.vocab_build_chunk(vals, vf.capacity))
 
+        fit_bufs = self._fit_bufs
+
         def fit_chunk(cols):
-            bufs = dict(self._assemble_sources_jnp(cols))
+            bufs = dict(self._assemble_sources_jnp(cols, fit_bufs))
             for s in plan.stages:
                 if s.stage_id not in fit_ids:
                     continue
@@ -425,8 +432,9 @@ class CompiledPipeline:
                     for vf in self.plan.vocab_fits}
             states = {vid: g.init_state() for vid, g in gens.items()}
             offset = 0
+            fit_bufs = self._fit_bufs
             for raw in batch_iter:
-                bufs = self._gather_sources(raw)
+                bufs = self._gather_sources(raw, fit_bufs)
                 bufs = self._run_stages_numpy(bufs,
                                               set(self.plan.fit_stage_ids))
                 n_elems = 0
@@ -442,9 +450,10 @@ class CompiledPipeline:
                       for vf in self.plan.vocab_fits}
             mincounts = {vf.vocab_id: vf.min_count
                          for vf in self.plan.vocab_fits}
+            fit_bufs = self._fit_bufs
             for ci, raw in enumerate(batch_iter):
                 sources = {k: jnp.asarray(v)
-                           for k, v in self._raw_columns(raw).items()}
+                           for k, v in self._raw_columns(raw, fit_bufs).items()}
                 chunk_fps = self._fit_chunk_jit(sources)
                 for vid, (fp, cnt) in chunk_fps.items():
                     states[vid] = kref.vocab_merge(states[vid], fp, ci,
@@ -513,6 +522,10 @@ class CompiledPipeline:
         tables, n_uniq = self._staged_table_args()
         cols = {k: jnp.asarray(v) for k, v in self._raw_columns(raw_batch).items()}
         return self._apply_jit(tables, n_uniq, self._resolved_tables(), cols)
+
+    def referenced_columns(self) -> list:
+        """Raw columns the apply program reads (projection-pushdown set)."""
+        return self.plan.referenced_columns()
 
     # stats used by benchmarks / Table-4 analogue
     def resource_summary(self) -> dict:

@@ -1,6 +1,12 @@
 """User-facing Python template interface for pipeline composition (paper §3.4).
 
-Example (the paper's Pipeline II on the Criteo schema)::
+Example (the paper's Pipeline II on the Criteo schema), driven through the
+session facade — the pipeline declares *what* to compute, a ``Source``
+declares *what to read*, and ``EtlJob`` owns the compile → fit → streaming
+lifecycle (projection is pushed into the Source automatically)::
+
+    from repro.data.source import Source
+    from repro.session import EtlJob
 
     p = Pipeline(Schema.criteo_kaggle(), batch_size=65536)
     d = p.dense("dense_*") | Clamp(0.0) | Logarithm()
@@ -8,9 +14,17 @@ Example (the paper's Pipeline II on the Criteo schema)::
     p.output("dense", [d], dtype=np.float32, pad_cols_to=128)
     p.output("sparse", [s], dtype=np.int32, pad_cols_to=128)
     p.output("label", [p.label("label")], dtype=np.float32, squeeze=True)
-    compiled = p.compile(backend="pallas")
-    compiled.fit(batches)           # fit phase: learn vocab tables
-    packed = compiled(raw_batch)    # apply phase: training-ready tensors
+
+    src = Source.columnar("/data/criteo").rebatch(65536)
+    job = EtlJob(p, src, backend="pallas",
+                 fit_source=Source.columnar("/data/criteo_sample"))
+    job.fit()                       # fit phase: learn vocab tables
+    with job.batches() as batches:  # apply phase, overlapped with training
+        for packed in batches:
+            state, metrics = train_step(state, packed)
+
+The low-level path (``compiled = p.compile(...); compiled.fit(...);
+compiled(raw_batch)``) remains available for kernel-level work.
 """
 
 from __future__ import annotations
@@ -91,7 +105,7 @@ class Pipeline:
         plan = planner.plan(self._outputs)
         return CompiledPipeline(plan, self.graph, backend,
                                 interpret=interpret, name=self.name,
-                                fuse=fuse)
+                                fuse=fuse, semantics=self.semantics)
 
 
 # ---------------------------------------------------------------------------

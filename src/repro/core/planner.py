@@ -144,12 +144,60 @@ class ExecutionPlan:
     pack: list[PackOutput]
     source_buffers: list[str]
     dataflows: list[DataflowProgram] = dataclasses.field(default_factory=list)
+    # source buffer -> raw column names it reads (planner column-set export;
+    # consumed by repro.session to push projection into any Source)
+    source_columns: dict = dataclasses.field(default_factory=dict)
 
     def stage_by_id(self, sid: str):
         for s in self.stages:
             if s.stage_id == sid:
                 return s
         raise KeyError(sid)
+
+    def _columns_for(self, bufs) -> list[str]:
+        seen: set = set()
+        out: list[str] = []
+        for buf in self.source_buffers:
+            if buf not in bufs:
+                continue
+            for c in self.source_columns.get(buf, ()):
+                if c not in seen:
+                    seen.add(c)
+                    out.append(c)
+        return out
+
+    def referenced_columns(self) -> list[str]:
+        """Raw column names the apply program reads, in schema order.
+
+        A Source projected to exactly this set feeds the pipeline without
+        materializing any unreferenced column (projection pushdown)."""
+        return self._columns_for(set(self.source_buffers))
+
+    def fit_buffers(self) -> set:
+        """Every buffer the fit phase touches (the vocab-fit closure):
+        VocabFit inputs plus all inputs of the fit stages.  Single source
+        of truth — the compiler's fit gather and the fit-read projection
+        both derive from this set."""
+        needed = {vf.in_buf for vf in self.vocab_fits}
+        fit_ids = set(self.fit_stage_ids)
+        for s in self.stages:
+            if s.stage_id in fit_ids:
+                for attr in ("in_buf", "in_a", "in_b"):
+                    b = getattr(s, attr, None)
+                    if b:
+                        needed.add(b)
+        return needed
+
+    def fit_source_buffers(self) -> list[str]:
+        """Source buffers (in plan order) the fit phase reads."""
+        needed = self.fit_buffers()
+        return [b for b in self.source_buffers if b in needed]
+
+    def fit_referenced_columns(self) -> list[str]:
+        """Raw column names the *fit* phase reads (the vocab-fit closure) —
+        a subset of ``referenced_columns``; dense-only inputs never load
+        during fit when the fit Source is projected to this set."""
+        return self._columns_for(self.fit_buffers())
 
     def output_slice(self, po: PackOutput) -> list[str]:
         """Topo-ordered stage ids in the backward slice of one output."""
@@ -216,6 +264,7 @@ class Planner:
         stages: list = []
         vocab_fits: list[VocabFit] = []
         source_buffers: list[str] = []
+        source_columns: dict[str, list[str]] = {}
         # node.id -> (base buffer name, pending fusable ops, in_dtype, hex_w)
         chain: dict[str, tuple] = {}
         materialized: dict[str, str] = {}  # node.id -> buffer name
@@ -250,6 +299,7 @@ class Planner:
                                               np.dtype(node.dtype),
                                               hex_width=node.hex_width)
                 source_buffers.append(node.id)
+                source_columns[node.id] = [f.name for f in node.features]
                 chain[node.id] = (node.id, [], node.dtype, node.hex_width)
                 materialized[node.id] = node.id
             elif node.kind == NodeType.OP and node.op.fusable:
@@ -301,7 +351,8 @@ class Planner:
         plan = ExecutionPlan(buffers=buffers, stages=stages,
                              fit_stage_ids=fit_stage_ids,
                              vocab_fits=vocab_fits, pack=pack,
-                             source_buffers=source_buffers)
+                             source_buffers=source_buffers,
+                             source_columns=source_columns)
         plan.dataflows = [self._build_dataflow(plan, po) for po in plan.pack]
         return plan
 

@@ -69,10 +69,20 @@ def load_schema(path: str) -> Schema:
 
 
 def iter_shards(path: str, columns: Optional[Sequence[str]] = None,
-                start_shard: int = 0) -> Iterator[dict]:
-    """Stream shards with selective column access."""
+                start_shard: int = 0, *, shard_index: int = 0,
+                shard_count: int = 1) -> Iterator[dict]:
+    """Stream shards with selective column access.
+
+    ``columns`` is the projection pushdown point: ``np.load`` is lazy per
+    key, so unrequested columns are never read off disk.  ``shard_index`` /
+    ``shard_count`` select every ``shard_count``-th shard file (file-level
+    sharding for parallel ingest — reader *i* of *n* touches a disjoint
+    subset of shard files).
+    """
+    if not 0 <= shard_index < shard_count:
+        raise ValueError(f"shard_index {shard_index} not in [0, {shard_count})")
     man = read_manifest(path)
-    for sh in man["shards"][start_shard:]:
+    for sh in man["shards"][start_shard:][shard_index::shard_count]:
         with np.load(os.path.join(path, sh["file"])) as z:
             names = columns if columns is not None else list(z.files)
             yield {c: z[c] for c in names}

@@ -60,7 +60,8 @@ def stats_to_prometheus(stats: RuntimeStats, *, prefix: str = "repro_etl",
            "skipped_straggler_total": stats.skipped_straggler,
            "consumer_wait_seconds_total": stats.consumer_wait_s,
            "credit_grows_total": stats.credit_grows,
-           "credit_shrinks_total": stats.credit_shrinks}
+           "credit_shrinks_total": stats.credit_shrinks,
+           "raw_queue_resizes_total": stats.raw_resizes}
     for name in sorted(top):
         metric = f"{prefix}_{name}"
         lines.append(f"# TYPE {metric} counter")

@@ -6,30 +6,134 @@ independently compiled executable (jit cache entry); "reconfiguration within
 milliseconds" is swapping which executables are active — no recompilation, the
 lowered artifact is reused.
 
-Scheduling is a **weighted-credit policy over the staged executor** (not a
-parallel code path): every tenant runs the same read → transform → place →
-deliver machinery from ``etl_runtime.runtime``, and the shared staging-buffer
-budget (``total_credits``) is split between tenants proportionally to their
-weights.  A tenant's credit share bounds its in-flight batches, so a heavy
-tenant cannot crowd the staging memory of a light one — the FPGA dynamic-
-region partitioning, expressed as queue capacity.  Tenants share the device;
-XLA serializes device work per stream while host-side stages run
-concurrently, so aggregate throughput scales until the device (or host
-ingest) saturates — mirroring Fig 17 where scaling is linear until NIC/PCIe
-bandwidth binds.
+Each tenant is an ``EtlJob`` (``repro.session``): the manager is a thin
+composition layer that splits two shared budgets across the jobs:
+
+- **staging credits** (``total_credits``): the shared staging-buffer budget
+  is split proportionally to tenant weights, so a heavy tenant's in-flight
+  batches cannot crowd a light tenant's staging memory — the FPGA dynamic-
+  region partitioning, expressed as queue capacity.
+- **transform service** (``service_weighted``): device *time* follows the
+  same weights.  A smooth weighted round-robin arbiter grants the transform
+  stage's dispatch slot among the tenants currently requesting one, so a
+  3:1 weight split yields a deterministic a,a,b,a grant cycle rather than
+  whoever's thread wakes first.  Credits bound memory; service bounds time.
+
+Tenants share the device; XLA serializes device work per stream while
+host-side stages run concurrently, so aggregate throughput scales until the
+device (or host ingest) saturates — mirroring Fig 17 where scaling is linear
+until NIC/PCIe bandwidth binds.
 """
 
 from __future__ import annotations
 
+import collections
 import itertools
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Iterator
+from typing import Optional
 
 import numpy as np
 
-from repro.etl_runtime.runtime import StreamingExecutor
+from repro.data.source import Source
+from repro.session import EtlJob
+
+
+class WeightedRoundRobin:
+    """Smooth weighted round-robin (nginx-style): each pick adds every
+    eligible tenant's weight to its running balance, grants the largest
+    balance (ties break in registration order — fully deterministic), and
+    charges the winner the eligible total.  Over any window the grant
+    counts track the weight ratios as closely as integer grants allow.
+    """
+
+    def __init__(self, weights: dict):
+        if not weights:
+            raise ValueError("WeightedRoundRobin needs at least one tenant")
+        if any(w <= 0 for w in weights.values()):
+            raise ValueError("tenant weights must be positive")
+        self.weights = {n: float(w) for n, w in weights.items()}
+        self._order = list(weights)
+        self._balance = {n: 0.0 for n in weights}
+
+    def pick(self, eligible=None) -> str:
+        names = [n for n in self._order
+                 if eligible is None or n in eligible]
+        if not names:
+            raise ValueError("no eligible tenants")
+        total = sum(self.weights[n] for n in names)
+        best = None
+        for n in names:
+            self._balance[n] += self.weights[n]
+            if best is None or self._balance[n] > self._balance[best]:
+                best = n
+        self._balance[best] -= total
+        return best
+
+
+class TransformService:
+    """Arbitrates transform-stage dispatch slots across tenants.
+
+    One slot exists; ``gate(name)`` hands a tenant its acquire/release
+    handle.  Acquire blocks until the WRR arbiter grants ``name`` a turn
+    among the tenants *currently requesting* (an idle tenant never blocks
+    the others); release frees the slot and re-arbitrates.
+    """
+
+    _GRANT_TRACE = 1024  # bounded: observability, not a full history
+
+    def __init__(self, weights: dict):
+        self._wrr = WeightedRoundRobin(weights)
+        self._cv = threading.Condition()
+        self._waiting: dict = {}
+        self._grant: Optional[str] = None
+        # most recent grant order (observability / tests); bounded so a
+        # long-running job never grows it past _GRANT_TRACE entries
+        self.grants: collections.deque = collections.deque(
+            maxlen=self._GRANT_TRACE)
+
+    def gate(self, name: str) -> "_TenantGate":
+        if name not in self._wrr.weights:
+            raise KeyError(name)
+        return _TenantGate(self, name)
+
+    def _acquire(self, name: str, stop=None) -> bool:
+        with self._cv:
+            self._waiting[name] = self._waiting.get(name, 0) + 1
+            try:
+                while True:
+                    if self._grant is None:
+                        self._grant = self._wrr.pick(set(self._waiting))
+                        self.grants.append(self._grant)
+                        self._cv.notify_all()
+                    if self._grant == name:
+                        return True
+                    if stop is not None and stop.is_set():
+                        return False  # teardown: run unarbitrated
+                    self._cv.wait(timeout=0.1)
+            finally:
+                self._waiting[name] -= 1
+                if not self._waiting[name]:
+                    del self._waiting[name]
+
+    def _release(self, name: str) -> None:
+        with self._cv:
+            if self._grant == name:
+                self._grant = None
+                self._cv.notify_all()
+
+
+@dataclass
+class _TenantGate:
+    service: TransformService
+    name: str
+
+    def acquire(self, stop=None) -> bool:
+        return self.service._acquire(self.name, stop=stop)
+
+    def release(self) -> None:
+        self.service._release(self.name)
 
 
 @dataclass
@@ -49,23 +153,24 @@ class TenantResult:
 
 @dataclass
 class PipelineManager:
-    """Run N compiled pipelines concurrently under a shared credit budget."""
+    """Run N compiled pipelines concurrently as weighted ``EtlJob``s."""
 
     tenants: dict = field(default_factory=dict)
     weights: dict = field(default_factory=dict)
     total_credits: int = 8
+    service_weighted: bool = True  # WRR arbitration of transform dispatch
 
-    def add(self, name: str, pipeline,
-            source_factory: Callable[[], Iterator[dict]], *,
-            weight: float = 1.0):
+    def add(self, name: str, pipeline, source, *, weight: float = 1.0):
+        """Register a tenant.  ``source`` is a ``Source``, or (legacy) a
+        zero-arg factory returning a fresh raw-batch iterator per run."""
         if name in self.tenants:
             raise ValueError(f"tenant {name!r} already registered")
         if weight <= 0:
             raise ValueError("tenant weight must be positive")
-        self.tenants[name] = (pipeline, source_factory)
+        self.tenants[name] = (pipeline, source)
         self.weights[name] = float(weight)
 
-    def swap(self, name: str, pipeline, source_factory) -> None:
+    def swap(self, name: str, pipeline, source) -> None:
         """Partial-reconfiguration analogue: replace a tenant's pipeline.
 
         The new pipeline must already be compiled; the swap itself is O(1)
@@ -73,9 +178,9 @@ class PipelineManager:
         """
         if name not in self.tenants:
             raise KeyError(name)
-        self.tenants[name] = (pipeline, source_factory)
+        self.tenants[name] = (pipeline, source)
 
-    def credit_allocation(self) -> dict[str, int]:
+    def credit_allocation(self) -> dict:
         """Weighted split of the staging-credit budget (each tenant ≥ 1).
 
         Largest-remainder apportionment so the shares actually sum to
@@ -97,35 +202,51 @@ class PipelineManager:
             leftover -= 1
         return alloc
 
-    def run(self, n_batches: int) -> dict[str, TenantResult]:
+    def jobs(self) -> dict:
+        """One EtlJob per tenant under the shared budgets (the manager is
+        composition, not a parallel code path)."""
+        alloc = self.credit_allocation()
+        svc = (TransformService(self.weights)
+               if self.service_weighted and len(self.tenants) > 1 else None)
+        out = {}
+        for name, (pipeline, source) in self.tenants.items():
+            src = (source if isinstance(source, Source)
+                   else Source.stream(source))
+            out[name] = EtlJob(
+                pipeline, src, credits=alloc[name],
+                transform_service=svc.gate(name) if svc else None,
+                name=name)
+        return out
+
+    def run(self, n_batches: int) -> dict:
         alloc = self.credit_allocation()
         results = {n: TenantResult(n, weight=self.weights[n],
                                    credits=alloc[n])
                    for n in self.tenants}
         errors: list = []
 
-        def worker(name, pipeline, source_factory):
-            ex = StreamingExecutor(pipeline, source_factory(),
-                                   credits=alloc[name])
+        def worker(name: str, job: EtlJob):
             try:
-                t0 = time.perf_counter()
-                for out in itertools.islice(ex, n_batches):
-                    # block so throughput numbers are honest
-                    for v in out.values():
-                        if hasattr(v, "block_until_ready"):
-                            v.block_until_ready()
-                    results[name].batches += 1
-                    results[name].rows += int(
-                        np.shape(next(iter(out.values())))[0])
-                results[name].seconds = time.perf_counter() - t0
-                results[name].stage_breakdown = ex.stats.stage_breakdown()
+                with job.batches() as ex:
+                    t0 = time.perf_counter()
+                    for out in itertools.islice(ex, n_batches):
+                        # block so throughput numbers are honest
+                        for v in out.values():
+                            if hasattr(v, "block_until_ready"):
+                                v.block_until_ready()
+                        results[name].batches += 1
+                        results[name].rows += int(
+                            np.shape(next(iter(out.values())))[0])
+                    results[name].seconds = time.perf_counter() - t0
+                results[name].stage_breakdown = (
+                    job.stats().stage_breakdown())
             except Exception as e:  # pragma: no cover
                 errors.append((name, e))
             finally:
-                ex.stop()
+                job.close()
 
-        threads = [threading.Thread(target=worker, args=(n, p, s), daemon=True)
-                   for n, (p, s) in self.tenants.items()]
+        threads = [threading.Thread(target=worker, args=(n, j), daemon=True)
+                   for n, j in self.jobs().items()]
         for t in threads:
             t.start()
         for t in threads:

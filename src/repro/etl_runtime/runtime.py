@@ -12,10 +12,14 @@ them in ascending length-key order (LM efficiency mode — similar-length
 batches train together), trading strict arrival order inside the bounded
 window only.  FIFO pipelines skip the stage entirely.
 
-- **read** pulls raw batches from the source iterator.  A source stall beyond
-  ``read_timeout_s`` is detected downstream and counted as a straggler skip,
-  so one slow storage node cannot stall the whole pipeline (the 1000-node
-  posture: this is per-host, and hosts are independent).
+- **read** pulls raw batches from the source — a first-class
+  ``repro.data.source.Source`` (whose ``length_key`` / ``arrival`` specs are
+  computed host-side here and ride each batch's envelope) or any iterator.
+  A source stall beyond ``read_timeout_s`` is detected downstream and counted
+  as a straggler skip, so one slow storage node cannot stall the whole
+  pipeline (the 1000-node posture: this is per-host, and hosts are
+  independent).  Most callers construct executors through
+  ``repro.session.EtlJob`` rather than directly.
 - **transform** dispatches the jitted apply-program.  JAX async dispatch means
   the stage enqueues *device futures* — no host materialization, no
   ``block_until_ready`` — so real ETL compute overlaps the trainer's step.
@@ -60,12 +64,13 @@ import collections
 import queue
 import threading
 import time
-from dataclasses import dataclass, field
-from typing import Callable, Iterator, Optional
+from dataclasses import dataclass, field, replace
+from typing import Callable, Optional
 
 import numpy as np
 
 from repro.core.semantics import PipelineSemantics
+from repro.data.source import Source
 from repro.etl_runtime import transfer as transfer_lib
 
 
@@ -156,6 +161,17 @@ class CreditQueue:
 
 
 @dataclass
+class _Envelope:
+    """Per-batch sidecar riding every queue: the payload plus host-side
+    metadata the stages consult without touching the (possibly device-
+    future) payload — the Source-provided ordering key and arrival time."""
+
+    payload: object
+    length_key: Optional[float] = None
+    arrival: Optional[float] = None
+
+
+@dataclass
 class StageStats:
     """Per-stage occupancy accounting (paper Fig 8 breakdown)."""
     name: str
@@ -183,8 +199,14 @@ class RuntimeStats:
     consumer_wait_s: float = 0.0   # time trainer starved (ETL slower)
     credit_grows: int = 0          # adaptive-credit budget increases
     credit_shrinks: int = 0        # adaptive-credit budget decreases
+    raw_resizes: int = 0           # adaptive resizes applied to the raw queue
     epoch_marks: list = field(default_factory=list)
     stages: dict = field(default_factory=dict)  # name -> StageStats
+    # arrival timestamps (Source.arrival) of delivered batches, in delivery
+    # order — the freshness-experiment record of what actually trained;
+    # bounded so a long-running online job never grows it without limit
+    delivered_arrivals: collections.deque = field(
+        default_factory=lambda: collections.deque(maxlen=4096))
 
     # -- compatibility views over the per-stage accounting ----------------
 
@@ -298,6 +320,11 @@ class _SortStage(threading.Thread):
     ``length_key`` order (stable: equal keys keep arrival order), then
     refills.  EOS flushes the partial window before forwarding, so no batch
     is lost; stop aborts promptly like every other stage.
+
+    The key comes from the batch envelope when the Source supplied a
+    host-side ``length_key`` (computed at read time — the transform stage's
+    device futures are never synced); only keyless envelopes fall back to
+    the ``length_key`` callable, which materializes the payload.
     """
 
     def __init__(self, stats: StageStats, in_q: CreditQueue,
@@ -341,7 +368,10 @@ class _SortStage(threading.Thread):
                 return
             t1 = time.perf_counter()
             try:
-                buf.append((self.length_key(item), item))
+                key = item.length_key
+                if key is None:
+                    key = self.length_key(item.payload)
+                buf.append((key, item))
             except Exception as e:
                 if self.on_error:
                     self.on_error(e)
@@ -357,7 +387,9 @@ class StreamingExecutor:
     Parameters
     ----------
     pipeline : compiled apply-program, called as ``pipeline(raw) -> packed``.
-    source : iterator of raw columnar batches.
+    source : a ``repro.data.source.Source`` (preferred — its ``length_key``
+        and ``arrival`` specs feed the order stage and freshness accounting)
+        or any iterator of raw columnar batches.
     semantics : optional PipelineSemantics; ``freshness.online`` enables
         oldest-first shedding at the ready queue.
     credits : staging-buffer depth per queue (2 = double buffering).
@@ -375,21 +407,25 @@ class StreamingExecutor:
         the staging queues when the trainer starves, shrink when batches sit
         unconsumed (see module docstring).
     max_credits : upper bound for adaptive growth.
-    length_key : batch -> sortable length for bucket_by_length ordering
-        (default: token count via ``default_length_key``).
+    length_key : *fallback* batch -> sortable length for bucket_by_length
+        ordering (default: token count via ``default_length_key``); only
+        consulted when the Source did not supply a host-side key.
+    transform_service : optional acquire/release gate arbitrating transform-
+        stage device time across tenants (see ``etl_runtime.multitenant``).
     """
 
     _ADAPT_EVERY = 4          # deliveries per resize decision
     _STARVED_EPS_S = 1e-3     # a delivery that waited longer counts starved
 
-    def __init__(self, pipeline, source: Iterator[dict], *,
+    def __init__(self, pipeline, source, *,
                  semantics: Optional[PipelineSemantics] = None,
                  credits: int = 2,
                  place: Optional[Callable[[dict], dict]] = None,
                  sharding=None, mesh=None,
                  read_timeout_s: float = 30.0,
                  adaptive_credits: bool = False, max_credits: int = 8,
-                 length_key: Callable = default_length_key):
+                 length_key: Callable = default_length_key,
+                 transform_service=None):
         self.pipeline = pipeline
         self.semantics = semantics or getattr(pipeline, "semantics", None)
         self.credits = max(1, credits)
@@ -407,6 +443,12 @@ class StreamingExecutor:
                 place = lambda b: b
         self.place = place
         self._source = source
+        self._host_key_fn = None
+        self._arrival_fn = None
+        if isinstance(source, Source):
+            self._host_key_fn = source.spec.length_key
+            self._arrival_fn = source.spec.arrival_fn()
+        self._transform_service = transform_service
         self._stop = threading.Event()
         self._error: Optional[BaseException] = None
         self.stats = RuntimeStats()
@@ -449,13 +491,31 @@ class StreamingExecutor:
             place_in_q = self._sorted_q
         else:
             self._sorted_q = None
+
+        def _env_fn(fn):
+            """Lift a payload transform to the envelope the queues carry."""
+            def run(env: _Envelope) -> _Envelope:
+                return replace(env, payload=fn(env.payload))
+            return run
+
+        transform_fn = self.pipeline
+        if self._transform_service is not None:
+            def transform_fn(raw, _p=self.pipeline):
+                # weighted round-robin *service*: device time, not just
+                # staging credits, follows tenant weights
+                granted = self._transform_service.acquire(stop=self._stop)
+                try:
+                    return _p(raw)
+                finally:
+                    if granted:
+                        self._transform_service.release()
         self._stages = [
-            _Stage(self.stats.stages["transform"], self.pipeline,
+            _Stage(self.stats.stages["transform"], _env_fn(transform_fn),
                    self._raw_q, self._packed_q,
                    in_timeout_s=self.read_timeout_s,
                    on_in_timeout=_on_straggler, on_error=_on_error),
             *self._stages,
-            _Stage(self.stats.stages["place"], self.place,
+            _Stage(self.stats.stages["place"], _env_fn(self.place),
                    place_in_q, self._ready_q,
                    drop_oldest=fresh, on_put=_on_delivered,
                    on_error=_on_error),
@@ -471,18 +531,26 @@ class StreamingExecutor:
         st = self.stats.stages["read"]
         try:
             it = iter(self._source)
+            idx = 0
             while not self._stop.is_set():
                 t0 = time.perf_counter()
                 try:
                     raw = next(it)
+                    # envelope metadata is computed host-side at read time:
+                    # the ordering key never touches downstream device work
+                    key = (float(self._host_key_fn(raw))
+                           if self._host_key_fn is not None else None)
+                    arrival = (self._arrival_fn(idx)
+                               if self._arrival_fn is not None else None)
                 except StopIteration:
                     break
                 except Exception as e:
                     self._on_error(e)
                     return
                 st.busy_s += time.perf_counter() - t0
+                idx += 1
                 t1 = time.perf_counter()
-                r = self._raw_q.put(raw)
+                r = self._raw_q.put(_Envelope(raw, key, arrival))
                 st.wait_out_s += time.perf_counter() - t1
                 if r is _STOPPED:
                     return
@@ -525,9 +593,13 @@ class StreamingExecutor:
             self.stats.credit_shrinks += 1
         else:
             return
-        for q in (self._packed_q, self._ready_q, self._sorted_q):
+        # the raw (read→transform) queue resizes with the rest of the
+        # budget: a starving trainer deepens ingest prefetch too, and the
+        # shrink path reclaims that staging memory symmetrically
+        for q in (self._raw_q, self._packed_q, self._ready_q, self._sorted_q):
             if q is not None:
                 q.set_capacity(self.current_credits)
+        self.stats.raw_resizes += 1
 
     # ---- public API ------------------------------------------------------
 
@@ -557,8 +629,10 @@ class StreamingExecutor:
                 return
             self.stats.consumed += 1
             dst.items += 1
+            if item.arrival is not None:
+                self.stats.delivered_arrivals.append(item.arrival)
             self._adapt(wait)
-            yield item
+            yield item.payload
 
     def get_batch(self, timeout: Optional[float] = None):
         self.start()
@@ -573,13 +647,21 @@ class StreamingExecutor:
             raise StopIteration
         self.stats.consumed += 1
         dst.items += 1
+        if item.arrival is not None:
+            self.stats.delivered_arrivals.append(item.arrival)
         self._adapt(wait)
-        return item
+        return item.payload
 
     def stop(self):
         """Prompt, non-blocking shutdown: stages unblock on the stop event
-        even when their queues are full (no sentinel deadlock)."""
+        even when their queues are full (no sentinel deadlock).  A closeable
+        Source (queue streams) is closed so the read thread cannot stay
+        parked on an empty feed."""
         self._stop.set()
+        # Source.close() unblocks queue-stream readers; plain iterators are
+        # left alone (a generator's close() raises if it is mid-next())
+        if isinstance(self._source, Source):
+            self._source.close()
         for q in (self._raw_q, self._packed_q, self._sorted_q, self._ready_q):
             if q is not None:
                 q.wake()

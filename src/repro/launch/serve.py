@@ -1,7 +1,13 @@
-"""Serving launcher: batched prefill+decode against a selectable arch.
+"""Serving launcher: ETL-fed batched prefill+decode against a selectable arch.
 
 Local smoke run: PYTHONPATH=src python -m repro.launch.serve \
     --arch mamba2_370m --reduced --batch 4 --prompt-len 32 --max-new 16
+
+Prompt ingest runs through the same declarative session facade as training
+(`repro.session.EtlJob` over a `Source`): raw event logs stream through the
+compiled token pipeline (SigridHash bounds unbounded ids into the model's
+vocab), so serving exercises the identical ETL contract — freshness,
+batching, and packer layout — the trainer consumes.
 
 ``--metrics-file PATH`` exports the run's counters in Prometheus text
 format for a node_exporter textfile collector (ETL-fed launchers export
@@ -13,12 +19,15 @@ from __future__ import annotations
 import argparse
 
 import jax
-import numpy as np
+import jax.numpy as jnp
 
 from repro.configs.registry import get_config, get_reduced
+from repro.core.pipeline import lm_token_pipeline
+from repro.data.source import Source
 from repro.etl_runtime import metrics as metrics_lib
 from repro.models.api import build_model
 from repro.serving.decode import generate
+from repro.session import EtlJob
 
 
 def export_metrics(path: str, *, counters: dict, arch: str) -> None:
@@ -26,6 +35,15 @@ def export_metrics(path: str, *, counters: dict, arch: str) -> None:
     text = metrics_lib.counters_to_prometheus(
         counters, prefix="repro_serve", labels={"arch": arch})
     metrics_lib.write_metrics_file(path, text)
+
+
+def make_prompt_job(cfg, *, batch: int, prompt_len: int,
+                    seed: int = 0) -> EtlJob:
+    """Prompt-ingest session: raw event ids -> bounded (batch, len) tokens."""
+    pipe = lm_token_pipeline(prompt_len, cfg.vocab_size, batch_size=batch)
+    src = Source.lm_events(prompt_len, rows=batch, batch_size=batch,
+                           seed=seed)
+    return EtlJob(pipe, src, backend="jnp", credits=1, name="serve-prompts")
 
 
 def main(argv=None):
@@ -43,10 +61,11 @@ def main(argv=None):
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
-    rng = np.random.default_rng(0)
-    prompts = rng.integers(0, cfg.vocab_size,
-                           (args.batch, args.prompt_len)).astype(np.int32)
-    toks, stats = generate(model, params, jax.numpy.asarray(prompts),
+    job = make_prompt_job(cfg, batch=args.batch, prompt_len=args.prompt_len)
+    with job.batches() as batches:
+        prompt_batch = next(iter(batches))
+    prompts = jnp.asarray(prompt_batch["tokens"])
+    toks, stats = generate(model, params, prompts,
                            max_new=args.max_new,
                            max_len=args.prompt_len + args.max_new,
                            temperature=args.temperature,
@@ -55,11 +74,13 @@ def main(argv=None):
           f"decode={stats.decode_s:.3f}s ({stats.tokens_per_s:,.1f} tok/s)")
     print("[serve] first sequence:", toks[0][:16].tolist())
     if args.metrics_file:
+        etl = job.stats()
         export_metrics(args.metrics_file, arch=cfg.name, counters={
             "prefill_seconds_total": stats.prefill_s,
             "decode_seconds_total": stats.decode_s,
             "generated_tokens_total": args.batch * args.max_new,
             "sequences_total": args.batch,
+            "etl_prompt_batches_total": etl.consumed if etl else 0,
         })
         print(f"[serve] metrics written to {args.metrics_file}")
 

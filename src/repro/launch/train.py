@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import argparse
 import time
+import warnings
 
 import jax
 import numpy as np
@@ -23,30 +24,40 @@ import numpy as np
 from repro.configs.base import ShapeCfg
 from repro.configs.registry import get_config, get_reduced
 from repro.core.pipeline import lm_token_pipeline
-from repro.data import synth
+from repro.data.source import Source
 from repro.distributed import sharding as shd
-from repro.etl_runtime.runtime import StreamingExecutor
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.launch.presets import train_preset
 from repro.models.api import build_model, input_specs
+from repro.session import EtlJob
 from repro.training import checkpoint as ckpt_lib
 from repro.training.fault import run_with_restarts
 from repro.training.train_loop import (LoopConfig, TrainState, jit_train_step,
                                        make_train_step, train_loop)
 
 
-def make_batches(cfg, batch, seq, steps, *, backend="jnp", mesh=None):
-    """Streaming ETL source: raw event logs -> token batches (overlapped).
+def make_job(cfg, batch, seq, steps, *, backend="jnp", mesh=None,
+             metrics_file="") -> EtlJob:
+    """Declarative ingest session: raw event logs -> token batches.
 
-    With a mesh, the executor's place stage double-buffers ``device_put``
-    with the trainer's batch ``NamedSharding``, so delivered batches are
-    already laid out for ``train_step``'s ``in_shardings``.
+    The ``Source`` names the stream; ``EtlJob`` owns compile + executor
+    lifecycle.  With a mesh, the executor's place stage double-buffers
+    ``device_put`` with the trainer's batch ``NamedSharding``, so delivered
+    batches are already laid out for ``train_step``'s ``in_shardings``.
     """
-    pipe = lm_token_pipeline(seq, cfg.vocab_size,
-                             batch_size=batch).compile(backend=backend)
-    src = synth.lm_event_batches(seq, rows=batch * (steps + 4),
-                                 batch_size=batch)
-    return StreamingExecutor(pipe, src, credits=2, mesh=mesh)
+    pipe = lm_token_pipeline(seq, cfg.vocab_size, batch_size=batch)
+    src = Source.lm_events(seq, rows=batch * (steps + 4), batch_size=batch)
+    return EtlJob(pipe, src, backend=backend, mesh=mesh, credits=2,
+                  metrics_file=metrics_file,
+                  metrics_labels={"arch": cfg.name})
+
+
+def make_batches(cfg, batch, seq, steps, *, backend="jnp", mesh=None):
+    """Deprecated shim: old signature, forwards to the EtlJob facade."""
+    warnings.warn("make_batches() is deprecated; use make_job() / "
+                  "repro.session.EtlJob", DeprecationWarning, stacklevel=2)
+    return make_job(cfg, batch, seq, steps,
+                    backend=backend, mesh=mesh).executor()
 
 
 def main(argv=None):
@@ -111,19 +122,20 @@ def main(argv=None):
             else:
                 state = make_state()
 
-            batches = make_batches(cfg, args.batch, args.seq, args.steps,
-                                   backend=args.etl_backend, mesh=mesh)
+            job = make_job(cfg, args.batch, args.seq, args.steps,
+                           backend=args.etl_backend, mesh=mesh,
+                           metrics_file=args.metrics_file)
             loop_cfg = LoopConfig(total_steps=args.steps,
                                   ckpt_dir=args.ckpt_dir,
                                   ckpt_every=args.ckpt_every,
                                   log_every=10,
                                   watchdog_s=args.watchdog_s)
             t0 = time.perf_counter()
-            with mesh, batches:
+            with mesh, job.batches() as batches:
                 final = train_loop(state, step_fn, batches, loop_cfg)
             dt = time.perf_counter() - t0
             toks = args.steps * args.batch * args.seq
-            stats = batches.stats
+            stats = job.stats()
             print(f"[train] done: {args.steps} steps, "
                   f"{toks/dt:,.0f} tok/s, etl_producer_wait="
                   f"{stats.producer_wait_s:.2f}s trainer_wait="
@@ -135,11 +147,6 @@ def main(argv=None):
                       f"wait_out={s['wait_out_s']:.2f}s "
                       f"occ={s['occupancy']:.1%}")
             if args.metrics_file:
-                from repro.etl_runtime import metrics as metrics_lib
-                metrics_lib.write_metrics_file(
-                    args.metrics_file,
-                    metrics_lib.stats_to_prometheus(
-                        stats, labels={"arch": cfg.name}))
                 print(f"[train] metrics written to {args.metrics_file}")
             return final
 

@@ -1,0 +1,278 @@
+"""EtlJob: the single session facade over compile → fit → streaming batches.
+
+The paper's training-aware ETL abstraction (§3) ends at the trainer, not at
+``Pipeline.compile()``: freshness, ordering, batching, sharding and overlap
+are one contract.  ``EtlJob`` is that contract as an object — it owns the
+whole lifecycle that launchers used to hand-wire::
+
+    pipe = paper_pipeline("II", small_vocab=65536, batch_size=4096)
+    src  = Source.columnar("/data/criteo").shard(host, n_hosts).rebatch(4096)
+    job  = EtlJob(pipe, src, backend="pallas", mesh=mesh,
+                  fit_source=Source.columnar("/data/criteo_sample"))
+    job.fit()                      # learn vocab tables (projected fit read)
+    with job.batches() as batches: # staged prefetching executor
+        for packed in batches:
+            state, m = train_step(state, packed)
+    print(job.stats().stage_breakdown())
+
+What the facade does for you:
+
+- **compile**: a ``Pipeline`` template is compiled on first use with the
+  job's ``backend``/``fuse``/``interpret`` knobs (an already-compiled
+  pipeline is accepted as-is).
+- **projection pushdown**: the planner exports the referenced-column set
+  (``ExecutionPlan.referenced_columns``) and the job projects the Source to
+  it, so a columnar dataset never materializes unreferenced columns; the
+  fit phase is projected to the (smaller) vocab-fit closure.
+- **semantics overrides**: ``freshness=`` / ``ordering=`` replace the
+  pipeline template's policies for this job without rebuilding the DAG.
+- **executor lifecycle**: ``batches()`` starts the staged prefetching
+  executor (credits, adaptive credits, mesh/sharding placement, straggler
+  timeout) and tears it down on exit; ``stats()`` exposes the run's
+  ``RuntimeStats``; ``metrics_file`` exports them as Prometheus text on
+  close.
+
+``etl_runtime.multitenant.PipelineManager`` composes one ``EtlJob`` per
+tenant under a shared credit budget and a weighted round-robin transform
+service.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import warnings
+from typing import Callable, Optional
+
+from repro.core.compiler import CompiledPipeline
+from repro.core.pipeline import Pipeline
+from repro.core.semantics import (FreshnessPolicy, OrderingPolicy,
+                                  PipelineSemantics)
+from repro.data.source import Source, as_source
+from repro.etl_runtime.runtime import (RuntimeStats, StreamingExecutor,
+                                       default_length_key)
+
+
+class EtlJob:
+    """One ETL session: ``(Pipeline, Source, overrides) -> batches``.
+
+    Parameters
+    ----------
+    pipeline : a ``Pipeline`` template (compiled lazily with ``backend`` /
+        ``fuse`` / ``interpret``) or an already-``CompiledPipeline``.
+    source : the apply-phase ``Source`` (anything batch-yielding is coerced
+        via ``Source.stream``); may be ``None`` for fit-/apply-only jobs.
+    fit_source : Source for ``fit()`` when it differs from ``source``.
+    freshness, ordering : per-job overrides of the pipeline's semantics.
+    credits, adaptive_credits, max_credits, read_timeout_s, mesh, sharding,
+    place, length_key, transform_service : forwarded to the executor
+        (see ``StreamingExecutor``).
+    rebatch : when True, rebatch the source to the batching policy's
+        ``batch_size`` (decouples source shard geometry from the trainer).
+    pushdown : when False, skip the automatic column projection.
+    metrics_file : if set, write Prometheus-text stage stats here on close.
+    metrics_labels : extra labels for the metrics export.
+    """
+
+    def __init__(self, pipeline, source=None, *,
+                 backend: str = "jnp", fuse: str = "auto",
+                 interpret: Optional[bool] = None,
+                 fit_source=None,
+                 freshness: Optional[FreshnessPolicy] = None,
+                 ordering: Optional[OrderingPolicy] = None,
+                 credits: int = 2, adaptive_credits: bool = False,
+                 max_credits: int = 8, read_timeout_s: float = 30.0,
+                 mesh=None, sharding=None, place=None,
+                 length_key: Callable = default_length_key,
+                 transform_service=None,
+                 rebatch: bool = False, pushdown: bool = True,
+                 metrics_file: str = "", metrics_labels: Optional[dict] = None,
+                 name: Optional[str] = None):
+        self._template: Optional[Pipeline] = None
+        self._compiled: Optional[CompiledPipeline] = None
+        if isinstance(pipeline, Pipeline):
+            self._template = pipeline
+        elif callable(pipeline):
+            # CompiledPipeline, or any raw->packed callable (tests, shims)
+            self._compiled = pipeline
+        else:
+            raise TypeError(f"pipeline must be a Pipeline or a compiled "
+                            f"apply program, got {type(pipeline).__name__}")
+        self._backend = backend
+        self._fuse = fuse
+        self._interpret = interpret
+        self._source = as_source(source) if source is not None else None
+        self._fit_source = (as_source(fit_source)
+                            if fit_source is not None else None)
+        self._freshness = freshness
+        self._ordering = ordering
+        self._executor_kw = dict(
+            credits=credits, adaptive_credits=adaptive_credits,
+            max_credits=max_credits, read_timeout_s=read_timeout_s,
+            mesh=mesh, sharding=sharding, place=place,
+            length_key=length_key, transform_service=transform_service)
+        self._rebatch = rebatch
+        self._pushdown = pushdown
+        self.metrics_file = metrics_file
+        self.metrics_labels = dict(metrics_labels or {})
+        self.name = name or getattr(pipeline, "name", "etl-job")
+        self._executor: Optional[StreamingExecutor] = None
+        self._last_stats: Optional[RuntimeStats] = None
+
+    # ---- compile ---------------------------------------------------------
+
+    @property
+    def compiled(self) -> CompiledPipeline:
+        """The compiled apply/fit program (compiles the template on first
+        use)."""
+        if self._compiled is None:
+            self._compiled = self._template.compile(
+                backend=self._backend, interpret=self._interpret,
+                fuse=self._fuse)
+        return self._compiled
+
+    @property
+    def semantics(self) -> Optional[PipelineSemantics]:
+        """Pipeline semantics with this job's overrides applied."""
+        base = getattr(self.compiled, "semantics", None)
+        if base is None and self._template is not None:
+            base = self._template.semantics
+        if base is None:
+            return None
+        changes = {}
+        if self._freshness is not None:
+            changes["freshness"] = self._freshness
+        if self._ordering is not None:
+            changes["ordering"] = self._ordering
+        return dataclasses.replace(base, **changes) if changes else base
+
+    # ---- sources (projection pushdown) -----------------------------------
+
+    def _project(self, src: Source, columns) -> Source:
+        """Push a column set into a Source unless the user already
+        projected (an explicit ``.columns`` spec wins) or supplied a host
+        ``length_key`` — the key function may read columns the pipeline
+        itself never references, so only an explicit projection narrows
+        such a source."""
+        if (not self._pushdown or src.spec.columns is not None
+                or src.spec.length_key is not None):
+            return src
+        return src.columns(columns)
+
+    def apply_source(self) -> Source:
+        """The effective apply-phase Source: user spec + pushed projection
+        (+ rebatch to the batching policy when requested)."""
+        if self._source is None:
+            raise ValueError("EtlJob has no source; pass one at construction")
+        plan = getattr(self.compiled, "plan", None)
+        src = self._source
+        if plan is not None:
+            src = self._project(src, plan.referenced_columns())
+        sem = self.semantics
+        if self._rebatch and sem is not None and src.spec.rebatch_rows is None:
+            src = src.rebatch(sem.batching.batch_size,
+                              drop_remainder=sem.batching.drop_remainder)
+        return src
+
+    # ---- fit -------------------------------------------------------------
+
+    def fit(self, source=None):
+        """Fit phase: learn vocabulary tables from ``source`` (default: the
+        job's ``fit_source``, else its apply source), with the fit read
+        projected to the vocab-fit closure's columns."""
+        src = source if source is not None else (self._fit_source
+                                                 or self._source)
+        plan = getattr(self.compiled, "plan", None)
+        if src is None:
+            if plan is None or not plan.vocab_fits:
+                return self.compiled.fit(iter(()))  # stateless: bump version
+            raise ValueError("fit requires a source (pipeline has vocabs)")
+        src = as_source(src)
+        if plan is not None:
+            src = self._project(src, plan.fit_referenced_columns())
+        return self.compiled.fit(iter(src))
+
+    # ---- apply (one-shot, bench/debug path) ------------------------------
+
+    def apply(self, raw_batch: dict) -> dict:
+        """Apply the compiled program to one raw batch (no executor)."""
+        return self.compiled(raw_batch)
+
+    # ---- executor lifecycle ----------------------------------------------
+
+    def executor(self) -> StreamingExecutor:
+        """Build (without starting) the staged prefetching executor for this
+        job's pipeline + effective source."""
+        return StreamingExecutor(self.compiled, self.apply_source(),
+                                 semantics=self.semantics,
+                                 **self._executor_kw)
+
+    def start(self) -> StreamingExecutor:
+        if self._executor is None:
+            self._executor = self.executor()
+            self._executor.start()
+        return self._executor
+
+    @contextlib.contextmanager
+    def batches(self):
+        """Context manager over the job's batch stream: starts the staged
+        executor, yields it (iterate for packed batches), and on exit stops
+        the stages and writes the metrics file when configured."""
+        ex = self.start()
+        try:
+            yield ex
+        finally:
+            self.close()
+
+    def close(self) -> None:
+        """Stop the executor (if running) and export metrics when asked."""
+        if self._executor is not None:
+            self._executor.stop()
+            self._last_stats = self._executor.stats
+            self._executor = None
+        if self.metrics_file and self._last_stats is not None:
+            self.write_metrics(self.metrics_file)
+
+    def stop(self) -> None:
+        self.close()
+
+    def __enter__(self) -> StreamingExecutor:
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ---- observability ---------------------------------------------------
+
+    def stats(self) -> Optional[RuntimeStats]:
+        """RuntimeStats of the live executor, else the last finished run."""
+        if self._executor is not None:
+            return self._executor.stats
+        return self._last_stats
+
+    def write_metrics(self, path: str, *,
+                      labels: Optional[dict] = None) -> None:
+        from repro.etl_runtime import metrics as metrics_lib
+        stats = self.stats()
+        if stats is None:
+            return
+        all_labels = {**self.metrics_labels, **(labels or {})}
+        metrics_lib.write_metrics_file(
+            path, metrics_lib.stats_to_prometheus(stats, labels=all_labels))
+
+    @property
+    def state(self):
+        """Vocabulary PipelineState of the compiled pipeline."""
+        return self.compiled.state
+
+    def lowering_report(self) -> dict:
+        return self.compiled.lowering_report()
+
+
+def streaming_executor(pipeline, source, **kw) -> StreamingExecutor:
+    """Deprecated shim: old call sites that built a ``StreamingExecutor``
+    directly should construct an ``EtlJob`` and use ``job.batches()``."""
+    warnings.warn("streaming_executor() is deprecated; use "
+                  "repro.session.EtlJob(...).batches()", DeprecationWarning,
+                  stacklevel=2)
+    return EtlJob(pipeline, source, **kw).executor()

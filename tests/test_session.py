@@ -1,0 +1,342 @@
+"""EtlJob session facade: lifecycle, projection pushdown, host-side
+length keys, weighted round-robin transform service, adaptive raw-queue
+resize, bit-equality of the facade path with the direct path."""
+
+import tempfile
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.operators import Clamp, FillMissing, Logarithm
+from repro.core.pipeline import Pipeline, paper_pipeline
+from repro.core.schema import Schema
+from repro.core.semantics import (BatchingPolicy, FreshnessPolicy,
+                                  OrderingPolicy, PipelineSemantics)
+from repro.data import columnar, synth
+from repro.data.source import Source
+from repro.etl_runtime.multitenant import (PipelineManager, TransformService,
+                                           WeightedRoundRobin)
+from repro.etl_runtime.runtime import StreamingExecutor
+from repro.session import EtlJob
+
+
+@pytest.fixture(scope="module")
+def dataset_dir():
+    with tempfile.TemporaryDirectory() as d:
+        columnar.write_dataset(
+            d, Schema.criteo_kaggle(),
+            synth.dataset_batches("I", rows=2000, batch_size=500))
+        yield d
+
+
+# ---------------- lifecycle ----------------
+
+def test_job_compile_fit_batches_stats():
+    job = EtlJob(paper_pipeline("II", small_vocab=512, batch_size=500),
+                 Source.synth("I", rows=2000, batch_size=500, seed=2),
+                 backend="jnp",
+                 fit_source=Source.synth("I", rows=1000, batch_size=500))
+    job.fit()
+    assert max(job.state.n_unique.values()) > 0
+    with job.batches() as batches:
+        n = sum(1 for _ in batches)
+    assert n == 4
+    s = job.stats()
+    assert s is not None and s.consumed == 4
+    assert s.stage_breakdown()["transform"]["items"] == 4
+
+
+def test_job_semantics_flow_from_template():
+    """Pipeline-template semantics reach the executor without re-wiring."""
+    p = Pipeline(Schema.lm_events(8), batch_size=4,
+                 ordering=OrderingPolicy("bucket_by_length",
+                                         reorder_window=2))
+    t = p.tokens("tokens_raw")
+    p.output("tokens", [t], dtype=np.int32)
+    job = EtlJob(p, Source.lm_events(8, rows=16, batch_size=4),
+                 backend="jnp")
+    with job.batches() as ex:
+        list(ex)
+    assert "order" in job.stats().stages  # order stage came from the template
+
+
+def test_job_semantics_override():
+    job = EtlJob(paper_pipeline("I", modulus=256, batch_size=100),
+                 Source.synth("I", rows=200, batch_size=100),
+                 backend="jnp",
+                 freshness=FreshnessPolicy(max_staleness_batches=1))
+    assert job.semantics.freshness.online
+    assert job.semantics.ordering.kind == "fifo"  # untouched policy kept
+
+
+def test_job_metrics_file_written_on_close(tmp_path):
+    path = str(tmp_path / "etl.prom")
+    job = EtlJob(paper_pipeline("I", modulus=256, batch_size=100),
+                 Source.synth("I", rows=300, batch_size=100),
+                 backend="jnp", metrics_file=path,
+                 metrics_labels={"tenant": "t0"})
+    with job.batches() as ex:
+        assert len(list(ex)) == 3
+    text = (tmp_path / "etl.prom").read_text()
+    assert 'repro_etl_consumed_total{tenant="t0"} 3' in text
+
+
+def test_job_rebatch_to_batching_policy():
+    """rebatch=True decouples source batch geometry from BatchingPolicy."""
+    job = EtlJob(paper_pipeline("I", modulus=256, batch_size=500),
+                 Source.synth("I", rows=2000, batch_size=800, seed=1),
+                 backend="jnp", rebatch=True)
+    with job.batches() as ex:
+        sizes = [int(np.asarray(b["dense"]).shape[0]) for b in ex]
+    assert sizes == [500, 500, 500, 500]  # policy drops the remainder
+
+
+def test_job_rejects_non_pipeline():
+    with pytest.raises(TypeError):
+        EtlJob(42, Source.synth("I", rows=100, batch_size=100))
+
+
+# ---------------- projection pushdown (acceptance criterion) ----------------
+
+def _dense_only_pipeline() -> Pipeline:
+    p = Pipeline(Schema.criteo_kaggle(), batch_size=500)
+    d = p.dense("dense_*") | FillMissing(0.0) | Clamp(0.0) | Logarithm()
+    p.output("dense", [d], dtype=np.float32, pad_cols_to=16)
+    return p
+
+
+def test_pushdown_projects_source_to_referenced_columns(dataset_dir):
+    job = EtlJob(_dense_only_pipeline(), Source.columnar(dataset_dir),
+                 backend="jnp")
+    eff = job.apply_source()
+    assert eff.spec.columns == tuple(f"dense_{i}" for i in range(13))
+    raw = next(iter(eff))
+    assert set(raw) == set(eff.spec.columns)  # no label / sparse columns
+    out = job.apply(raw)
+    assert out["dense"].shape == (500, 16)
+
+
+def test_pushdown_skipped_when_host_length_key_present():
+    """A host length key may read columns the pipeline never references;
+    auto projection must not strip them out from under the key fn."""
+    job = EtlJob(_dense_only_pipeline(),
+                 Source.synth("I", rows=1000, batch_size=500).length_key(
+                     lambda raw: float(raw["sparse_0"][0, 0])),
+                 backend="jnp",
+                 ordering=OrderingPolicy("bucket_by_length",
+                                         reorder_window=2))
+    assert job.apply_source().spec.columns is None  # projection skipped
+    with job.batches() as ex:
+        assert len(list(ex)) == 2  # key fn saw sparse_0; no KeyError
+
+
+def test_pushdown_respects_explicit_projection(dataset_dir):
+    explicit = Source.columnar(dataset_dir).columns(
+        [f"dense_{i}" for i in range(13)] + ["label"])
+    job = EtlJob(_dense_only_pipeline(), explicit, backend="jnp")
+    assert job.apply_source().spec.columns == explicit.spec.columns
+
+
+def test_fit_projection_is_vocab_closure_only():
+    job = EtlJob(paper_pipeline("II", small_vocab=512, batch_size=500),
+                 backend="jnp")
+    cols = job.compiled.plan.fit_referenced_columns()
+    assert cols == [f"sparse_{i}" for i in range(26)]
+    assert len(job.compiled.plan.referenced_columns()) == 40
+
+
+def test_facade_output_bit_equal_to_direct_path(dataset_dir):
+    """Acceptance: the fused pallas apply through EtlJob + projected
+    columnar Source is bit-equal to the direct pre-refactor call path on
+    the Criteo-shaped dataset."""
+    direct = paper_pipeline("I", modulus=512,
+                            batch_size=500).compile(backend="pallas")
+    job = EtlJob(paper_pipeline("I", modulus=512, batch_size=500),
+                 Source.columnar(dataset_dir), backend="pallas")
+    assert any(r["path"] == "fused"
+               for r in job.lowering_report().values())
+    raw_full = next(columnar.iter_batches(dataset_dir, 500))
+    via_direct = direct(raw_full)
+    via_job = job.apply(next(iter(job.apply_source().rebatch(500))))
+    for k in via_direct:
+        np.testing.assert_array_equal(np.asarray(via_direct[k]),
+                                      np.asarray(via_job[k]))
+
+
+# ---------------- host-side length keys (ROADMAP follow-on) ----------------
+
+def _varlen_source():
+    lens = [5, 1, 3, 2, 6, 4]
+
+    def feed():
+        for n in lens:
+            yield {"tokens": np.arange(1, n + 1,
+                                       dtype=np.int32).reshape(1, n)}
+
+    return Source.stream(feed), lens
+
+
+def test_host_length_key_orders_without_touching_payload():
+    """Regression: with a Source-provided host key, the order stage never
+    syncs (or even inspects) the transform stage's output payloads."""
+    src, _ = _varlen_source()
+    src = src.length_key(lambda raw: float(raw["tokens"].shape[1]))
+
+    class _Opaque:
+        """Stands in for a device future: any inspection is an error."""
+
+        def __init__(self, inner):
+            self.inner = inner
+
+        def block_until_ready(self):
+            raise AssertionError("order stage synced a device future")
+
+        def __array__(self, *a, **k):
+            raise AssertionError("order stage materialized the payload")
+
+    def _fallback(batch):
+        raise AssertionError("fallback length key was consulted")
+
+    sem = PipelineSemantics(
+        batching=BatchingPolicy(1),
+        ordering=OrderingPolicy("bucket_by_length", reorder_window=3))
+    ex = StreamingExecutor(lambda b: {"tokens": _Opaque(b["tokens"])}, src,
+                           semantics=sem, credits=2, length_key=_fallback)
+    got = [int(b["tokens"].inner.shape[1]) for b in ex]
+    # windows [5,1,3] and [2,6,4], each ascending by the host key
+    assert got == [1, 3, 5, 2, 4, 6]
+
+
+def test_fallback_length_key_still_used_without_host_key():
+    src, _ = _varlen_source()
+    sem = PipelineSemantics(
+        batching=BatchingPolicy(1),
+        ordering=OrderingPolicy("bucket_by_length", reorder_window=3))
+    ex = StreamingExecutor(lambda b: b, src, semantics=sem, credits=2)
+    assert [int(b["tokens"].shape[1]) for b in ex] == [1, 3, 5, 2, 4, 6]
+
+
+# ---------------- arrival timestamps (freshness experiments) --------------
+
+def test_arrival_timestamps_recorded_for_delivered_batches():
+    src, lens = _varlen_source()
+    src = src.arrival([float(10 * (i + 1)) for i in range(len(lens))])
+    ex = StreamingExecutor(lambda b: b, src, credits=2)
+    assert len(list(ex)) == len(lens)
+    assert list(ex.stats.delivered_arrivals) == [10.0, 20.0, 30.0, 40.0,
+                                                 50.0, 60.0]
+
+
+def test_queue_stream_stop_does_not_leak_read_thread():
+    """A dead producer (no None sentinel) must not leak the read thread:
+    stop() closes the Source and every stage joins promptly."""
+    import queue as queue_lib
+
+    q = queue_lib.Queue()
+    q.put({"x": np.ones((2, 2), np.int32)})
+    ex = StreamingExecutor(lambda b: b, Source.stream(q, poll_s=0.05),
+                           credits=2)
+    it = iter(ex)
+    next(it)          # one batch delivered; producer now silent
+    ex.stop()
+    assert ex.join(timeout=2.0)
+
+
+def test_queue_stream_reiterates_after_close():
+    """close() ends only the active iteration: a later run of the same
+    queue Source still drains freshly queued data (multitenant managers
+    re-run their tenants)."""
+    import queue as queue_lib
+
+    q = queue_lib.Queue()
+    src = Source.stream(q, poll_s=0.05)
+    q.put({"x": np.ones((2, 2), np.int32)})
+    ex = StreamingExecutor(lambda b: b, src, credits=2)
+    next(iter(ex))
+    ex.stop()
+    assert ex.join(timeout=2.0)
+    # second run over the same Source after new data arrives
+    q.put({"x": np.full((2, 2), 7, np.int32)})
+    q.put(None)
+    ex2 = StreamingExecutor(lambda b: b, src, credits=2)
+    got = list(ex2)
+    assert len(got) == 1 and int(got[0]["x"][0, 0]) == 7
+
+
+# ---------------- weighted round-robin service ----------------
+
+def test_wrr_schedule_is_deterministic_and_proportional():
+    wrr = WeightedRoundRobin({"a": 3, "b": 1})
+    picks = [wrr.pick() for _ in range(8)]
+    assert picks == ["a", "a", "b", "a"] * 2  # smooth WRR, 3:1
+    assert picks.count("a") == 6 and picks.count("b") == 2
+
+
+def test_wrr_eligibility_excludes_idle_tenants():
+    wrr = WeightedRoundRobin({"a": 1, "b": 1, "c": 1})
+    assert [wrr.pick({"b"}) for _ in range(3)] == ["b"] * 3
+    with pytest.raises(ValueError):
+        wrr.pick(set())
+    with pytest.raises(ValueError):
+        WeightedRoundRobin({"a": 0})
+
+
+def test_transform_service_grants_follow_weights():
+    svc = TransformService({"hot": 2, "cold": 1})
+    hot, cold = svc.gate("hot"), svc.gate("cold")
+    # single-threaded: each acquire arbitrates among current requesters
+    order = []
+    for _ in range(6):
+        assert hot.acquire()
+        order.append("hot")
+        hot.release()
+    assert order == ["hot"] * 6  # cold never waiting -> hot never starved
+    assert list(svc.grants) == order
+    with pytest.raises(KeyError):
+        svc.gate("unknown")
+
+
+def test_multitenant_service_weighted_run_completes():
+    def _pipe():
+        return paper_pipeline("I", modulus=256,
+                              batch_size=500).compile(backend="jnp")
+
+    mgr = PipelineManager(total_credits=4, service_weighted=True)
+    mgr.add("a", _pipe(), Source.synth("I", rows=1500, batch_size=500,
+                                       seed=0), weight=2.0)
+    mgr.add("b", _pipe(), Source.synth("I", rows=1500, batch_size=500,
+                                       seed=1), weight=1.0)
+    res = mgr.run(n_batches=3)
+    assert all(r.batches == 3 for r in res.values())
+    assert all(r.stage_breakdown["transform"]["items"] >= 3
+               for r in res.values())
+
+
+# ---------------- adaptive credits: raw queue resize ----------------
+
+def test_adaptive_credits_resize_raw_queue_too():
+    def src(n=20):
+        for i in range(n):
+            yield {"x": np.full((4, 4), i, np.int32)}
+
+    def slow_pipe(b):
+        time.sleep(0.02)  # ETL slower than the (instant) consumer
+        return b
+
+    ex = StreamingExecutor(slow_pipe, src(), credits=2,
+                           adaptive_credits=True, max_credits=4)
+    assert sum(1 for _ in ex) == 20
+    assert ex.stats.credit_grows == 2
+    assert ex.stats.raw_resizes == 2           # counted per budget change
+    assert ex._raw_q.capacity == ex.current_credits == 4  # raw queue follows
+
+
+def test_fixed_credits_never_resize_raw_queue():
+    def src(n=6):
+        for i in range(n):
+            yield {"x": np.full((2, 2), i, np.int32)}
+
+    ex = StreamingExecutor(lambda b: b, src(), credits=2)
+    list(ex)
+    assert ex.stats.raw_resizes == 0 and ex._raw_q.capacity == 2

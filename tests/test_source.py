@@ -1,0 +1,184 @@
+"""Source API: chainable lazily-applied specs, projection pushdown into the
+columnar reader, rebatch edge cases, sharding, stream wrapping."""
+
+import queue
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core.schema import Schema
+from repro.data import columnar, synth
+from repro.data.source import Source, as_source
+
+
+@pytest.fixture(scope="module")
+def dataset_dir():
+    with tempfile.TemporaryDirectory() as d:
+        columnar.write_dataset(
+            d, Schema.criteo_kaggle(),
+            synth.dataset_batches("I", rows=2500, batch_size=1000))
+        yield d
+
+
+def _rows(batch: dict) -> int:
+    return int(next(iter(batch.values())).shape[0])
+
+
+# ---------------- chaining & laziness ----------------
+
+def test_specs_are_lazy_and_immutable():
+    src = Source.synth("I", rows=2000, batch_size=1000)
+    projected = src.columns(["label", "dense_0"])
+    assert src.spec.columns is None          # chaining never mutates
+    assert projected.spec.columns == ("label", "dense_0")
+    # the original still yields every column
+    assert len(next(iter(src))) == 40
+    assert set(next(iter(projected))) == {"label", "dense_0"}
+
+
+def test_synth_from_schema_object():
+    src = Source.synth(Schema.criteo_kaggle(), rows=300, batch_size=100)
+    batches = list(src)
+    assert [_rows(b) for b in batches] == [100, 100, 100]
+    assert "sparse_25" in batches[0]
+
+
+def test_shard_partitions_generated_stream():
+    src = Source.synth("I", rows=4000, batch_size=1000)
+    shard0 = list(src.shard(0, 2))
+    shard1 = list(src.shard(1, 2))
+    assert len(shard0) == 2 and len(shard1) == 2
+    # disjoint: shard batches interleave the base stream
+    base = list(src)
+    np.testing.assert_array_equal(shard0[0]["label"], base[0]["label"])
+    np.testing.assert_array_equal(shard1[0]["label"], base[1]["label"])
+    with pytest.raises(ValueError):
+        src.shard(2, 2)
+
+
+# ---------------- rebatch edge cases ----------------
+
+def test_rebatch_splits_and_emits_remainder():
+    src = Source.synth("I", rows=2500, batch_size=1000).rebatch(600)
+    sizes = [_rows(b) for b in src]
+    assert sizes == [600, 600, 600, 600, 100]  # remainder kept by default
+
+
+def test_rebatch_drop_remainder():
+    src = Source.synth("I", rows=2500, batch_size=1000).rebatch(
+        600, drop_remainder=True)
+    assert [_rows(b) for b in src] == [600] * 4
+
+
+def test_rebatch_coalesces_across_shard_boundaries(dataset_dir):
+    # 3 shard files of 1000/1000/500 rows -> 2 batches of 1250: the second
+    # 1250-row batch spans all three shards (coalescing, not just splitting)
+    src = Source.columnar(dataset_dir).rebatch(1250)
+    sizes = [_rows(b) for b in src]
+    assert sizes == [1250, 1250]
+    # bit-equality with the unbatched stream: carried rows keep their order
+    flat = {k: np.concatenate([b[k] for b in Source.columnar(dataset_dir)])
+            for k in next(iter(Source.columnar(dataset_dir)))}
+    rb = list(Source.columnar(dataset_dir).rebatch(1250))
+    np.testing.assert_array_equal(
+        np.concatenate([b["dense_3"] for b in rb]), flat["dense_3"])
+
+
+def test_rebatch_coalesces_small_batches():
+    src = Source.synth("I", rows=900, batch_size=100).rebatch(400)
+    assert [_rows(b) for b in src] == [400, 400, 100]
+
+
+# ---------------- projection pushdown (columnar) ----------------
+
+class _SpyNpz:
+    """np.load stand-in that records which column keys are materialized."""
+
+    accessed: list = []
+
+    def __init__(self, real):
+        self._real = real
+
+    @property
+    def files(self):
+        return self._real.files
+
+    def __getitem__(self, key):
+        _SpyNpz.accessed.append(key)
+        return self._real[key]
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return self._real.__exit__(*exc)
+
+
+def test_columnar_projection_never_materializes_others(dataset_dir,
+                                                       monkeypatch):
+    real_load = np.load
+    monkeypatch.setattr(columnar.np, "load",
+                        lambda *a, **k: _SpyNpz(real_load(*a, **k)))
+    _SpyNpz.accessed = []
+    got = list(Source.columnar(dataset_dir).columns(["label", "dense_2"]))
+    assert len(got) == 3 and set(got[0]) == {"label", "dense_2"}
+    assert set(_SpyNpz.accessed) == {"label", "dense_2"}  # nothing else read
+
+
+def test_columnar_shard_selects_disjoint_files(dataset_dir):
+    all_rows = sum(_rows(b) for b in Source.columnar(dataset_dir))
+    s0 = sum(_rows(b) for b in Source.columnar(dataset_dir).shard(0, 2))
+    s1 = sum(_rows(b) for b in Source.columnar(dataset_dir).shard(1, 2))
+    assert all_rows == 2500 and s0 + s1 == all_rows
+    assert {len(list(Source.columnar(dataset_dir).shard(i, 3)))
+            for i in range(3)} == {1}
+
+
+def test_columnar_loads_schema(dataset_dir):
+    src = Source.columnar(dataset_dir)
+    assert src.schema["sparse_0"].hex_width == 8
+
+
+# ---------------- stream / queue / coercion ----------------
+
+def test_stream_callable_is_reiterable():
+    calls = []
+
+    def feed():
+        calls.append(1)
+        return iter([{"x": np.ones(2)}])
+
+    src = Source.stream(feed)
+    assert len(list(src)) == 1 and len(list(src)) == 1
+    assert len(calls) == 2  # fresh iterator per pass
+
+
+def test_stream_queue_drains_until_sentinel():
+    q = queue.Queue()
+    for i in range(3):
+        q.put({"x": np.full(2, i)})
+    q.put(None)
+    got = list(Source.stream(q))
+    assert [int(b["x"][0]) for b in got] == [0, 1, 2]
+
+
+def test_as_source_identity_and_wrap():
+    src = Source.synth("I", rows=100, batch_size=100)
+    assert as_source(src) is src
+    wrapped = as_source([{"x": np.ones(1)}])
+    assert isinstance(wrapped, Source) and len(list(wrapped)) == 1
+
+
+# ---------------- length_key / arrival specs ----------------
+
+def test_length_key_and_arrival_ride_the_spec():
+    fn = lambda b: 1.0
+    src = Source.synth("I", rows=100, batch_size=100).length_key(fn)
+    assert src.spec.length_key is fn
+    a = src.arrival([1.0, 2.0])
+    assert a.spec.arrival == [1.0, 2.0]
+    lookup = a.spec.arrival_fn()
+    assert lookup(0) == 1.0 and lookup(5) is None
+    by_fn = src.arrival(lambda i: 10.0 * i).spec.arrival_fn()
+    assert by_fn(3) == 30.0
