@@ -15,6 +15,18 @@ Emits:
 ``--steps N`` overrides the batch count (CI smoke: ``--steps 3`` exercises
 the executor path end-to-end without asserting the utilization win, which
 needs enough batches to amortize warmup).
+
+``--sweep`` runs the Fig-8 sensitivity grid instead: credits x
+stage-cost-ratio cells with pinned (sleep-based) stage costs, emitting
+trainer utilization per cell —
+
+  fig8_sweep/credits=C_ratio=R
+
+The deterministic costs isolate the staging-depth effect: utilization
+should rise with credits while ETL is the bottleneck (ratio > 1) and
+saturate near 100% once ETL hides (ratio <= 1, credits >= 2).
+``--sweep-credits`` / ``--sweep-ratios`` override the grid (the nightly CI
+smoke runs a single cell).
 """
 
 from __future__ import annotations
@@ -87,12 +99,60 @@ def run_overlapped(job, step, state):
     return train_s / total, total, job.stats()
 
 
+def run_sweep(credits_list, ratios, steps):
+    """Credits x stage-cost-ratio sensitivity sweep (Fig-8, ROADMAP item).
+
+    Stage costs are pinned sleeps (deterministic, hardware-independent):
+    the transform stage costs ``ratio`` x the train step.  Each cell runs
+    the real staged executor through the ``EtlJob`` facade and reports the
+    trainer's utilization = train_time / (train_time + starvation).
+    """
+    train_s = 0.004
+    for credits in credits_list:
+        for ratio in ratios:
+            etl_s = train_s * ratio
+
+            def transform(raw, _etl_s=etl_s):
+                time.sleep(_etl_s)
+                return raw
+
+            src = Source.stream(
+                lambda: iter([{"i": np.arange(8)}] * steps))
+            job = EtlJob(transform, src, credits=credits,
+                         name=f"sweep-c{credits}-r{ratio}")
+            t0 = time.perf_counter()
+            train_total = 0.0
+            with job.batches() as ex:
+                for _ in ex:
+                    ts = time.perf_counter()
+                    time.sleep(train_s)
+                    train_total += time.perf_counter() - ts
+            wall = time.perf_counter() - t0
+            util = job.stats().trainer_utilization(train_total)
+            emit(f"fig8_sweep/credits={credits}_ratio={ratio:g}", wall,
+                 f"util={util:.2%}|starved={job.stats().consumer_wait_s:.3f}s")
+
+
+def _csv(kind):
+    return lambda s: [kind(v) for v in s.split(",") if v]
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=12,
                     help="batches per run (smoke: 3)")
+    ap.add_argument("--sweep", action="store_true",
+                    help="run the credits x stage-cost-ratio sweep instead")
+    ap.add_argument("--sweep-credits", type=_csv(int), default=[1, 2, 4],
+                    help="comma-separated credit depths for --sweep")
+    ap.add_argument("--sweep-ratios", type=_csv(float),
+                    default=[0.5, 1.0, 2.0],
+                    help="comma-separated ETL/train cost ratios for --sweep")
     args = ap.parse_args(argv)
     n = args.steps
+    if args.sweep:
+        run_sweep(args.sweep_credits, args.sweep_ratios, n)
+        return
 
     cfg = dlrm.DLRMConfig(vocab_size=8193, d_emb=32, bot_mlp=(128, 64, 32),
                           top_mlp=(128, 64, 1))

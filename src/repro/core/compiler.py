@@ -28,14 +28,27 @@ Either way the whole apply program is wrapped in one jit so a batch is a
 single device dispatch, and the numpy/jnp oracles are untouched — the
 three-backend bit-equality invariant pins fused and staged semantics alike.
 
-Vocabulary *fit* is streamed: chunked first-occurrence build (Pallas kernel or
-jnp scatter-min), merged into a two-int32 global state, finalized into frozen
-rank tables.  Tables are pipeline state, versioned for point-in-time
-correctness, and passed to the apply program as arguments (no recompilation on
-table refresh — the partial-reconfiguration analogue is a state swap).  For
-fused outputs the OOV rule is folded into the table once per table version
-(cached host-side; O(capacity) at fit/swap time, nothing per batch), so the
-in-kernel lookup is a pure gather.
+Vocabulary *fit* is streamed: chunked first-occurrence build, merged into a
+two-int32 global state, finalized into frozen rank tables.  On the pallas
+backend the fit chunk has the same two lowerings as apply, chosen per
+``VocabFit`` from the plan's ``FitProgram`` nodes:
+
+- **fused** (``fuse="auto"``): every legal vocab lowers its whole fit chunk
+  — upstream chains, hex decode, and the first-occurrence + count build — to
+  ONE row-tiled streaming kernel (``kernels/dataflow.make_fit_dataflow``);
+  no intermediate HBM tensors between the upstream stages and the build.
+- **staged** (fallback, or ``fuse="off"``): upstream stages run as separate
+  kernels with HBM materialization, then ``kernels/vocab.vocab_build_chunk``
+  builds the first-pos table (HBM-placed capacities always take this path —
+  the fused kernel's accumulators are VMEM-resident).
+
+Chunk results are merged identically either way, so ``PipelineState`` is
+bit-identical across lowerings (tests pin this).  Tables are pipeline state,
+versioned for point-in-time correctness, and passed to the apply program as
+arguments (no recompilation on table refresh — the partial-reconfiguration
+analogue is a state swap).  For fused outputs the OOV rule is folded into the
+table once per table version (cached host-side; O(capacity) at fit/swap time,
+nothing per batch), so the in-kernel lookup is a pure gather.
 """
 
 from __future__ import annotations
@@ -50,8 +63,8 @@ import numpy as np
 from repro.core import operators as ops_lib
 from repro.core.dag import NodeType
 from repro.core.planner import (CrossStage, DataflowProgram, ExecutionPlan,
-                                FusedStage, OneHotStage, PackOutput,
-                                VocabLookupStage)
+                                FitProgram, FusedStage, OneHotStage,
+                                PackOutput, VocabLookupStage)
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 from repro.kernels.dataflow import StreamInput, TableInput, TileStep
@@ -143,9 +156,13 @@ class CompiledPipeline:
         # per-output fused programs: only the pallas backend has a tile
         # codegen; jnp relies on XLA fusion and numpy is the oracle
         self._fused_programs: dict[str, DataflowProgram] = {}
+        self._fused_fit_programs: dict[str, FitProgram] = {}
         if backend == "pallas" and fuse == "auto":
             self._fused_programs = {dp.output: dp for dp in plan.dataflows
                                     if dp.legal}
+            self._fused_fit_programs = {fp.vocab_id: fp
+                                        for fp in plan.fit_dataflows
+                                        if fp.legal}
         self.state = PipelineState(
             tables={vf.vocab_id: np.full(vf.capacity, -1, np.int32)
                     for vf in plan.vocab_fits},
@@ -161,7 +178,8 @@ class CompiledPipeline:
         if backend != "numpy":
             self._apply_fn = self._build_apply()
             self._apply_jit = jax.jit(self._apply_fn)
-            self._fit_chunk_jit = jax.jit(self._build_fit_chunk())
+            self._fit_chunk_fn = self._build_fit_chunk()
+            self._fit_chunk_jit = jax.jit(self._fit_chunk_fn)
 
     # ------------------------------------------------------------------
     # source assembly: raw columnar batch -> source buffers
@@ -282,6 +300,24 @@ class CompiledPipeline:
         steps = []
         for sid in dp.stage_ids:
             s = plan.stage_by_id(sid)
+            if isinstance(s, VocabLookupStage):
+                idx = tbl_index[s.vocab_id]
+                tables[idx] = TableInput(s.vocab_id, s.capacity)
+                steps.append(TileStep("lookup", s.out_buf, (s.in_buf,),
+                                      table=idx))
+            else:
+                steps.extend(self._tile_steps([sid]))
+        terminals = [(b, plan.buffers[b].width) for b in po.buffers]
+        return kops.output_dataflow(inputs, tables, steps, terminals,
+                                    po.dtype, pad_cols_to=po.pad_cols_to,
+                                    interpret=self.interpret)
+
+    def _tile_steps(self, stage_ids) -> list[TileStep]:
+        """Shared TileStep codegen for the fused apply/fit kernel bodies
+        (lookup steps are resolved by the apply-side caller)."""
+        steps: list[TileStep] = []
+        for sid in stage_ids:
+            s = self.plan.stage_by_id(sid)
             if isinstance(s, FusedStage):
                 steps.append(TileStep("map", s.out_buf, (s.in_buf,),
                                       fn=_chain_fn(s)))
@@ -291,17 +327,19 @@ class CompiledPipeline:
             elif isinstance(s, OneHotStage):
                 steps.append(TileStep("map", s.out_buf, (s.in_buf,),
                                       fn=s.op.jnp_expr))
-            elif isinstance(s, VocabLookupStage):
-                idx = tbl_index[s.vocab_id]
-                tables[idx] = TableInput(s.vocab_id, s.capacity)
-                steps.append(TileStep("lookup", s.out_buf, (s.in_buf,),
-                                      table=idx))
-            else:  # pragma: no cover - legality pass rejects these
+            else:  # pragma: no cover - legality passes reject these
                 raise NotImplementedError(type(s))
-        terminals = [(b, plan.buffers[b].width) for b in po.buffers]
-        return kops.output_dataflow(inputs, tables, steps, terminals,
-                                    po.dtype, pad_cols_to=po.pad_cols_to,
-                                    interpret=self.interpret)
+        return steps
+
+    def _build_fit_dataflow_fn(self, fp: FitProgram):
+        """Lower one legal FitProgram to its single streaming fit kernel."""
+        plan = self.plan
+        inputs = [StreamInput(b, plan.buffers[b].width, plan.buffers[b].dtype,
+                              plan.buffers[b].hex_width)
+                  for b in fp.source_buffers]
+        steps = self._tile_steps(fp.stage_ids)
+        return kops.fit_dataflow(inputs, steps, fp.in_buf, fp.capacity,
+                                 interpret=self.interpret)
 
     def _build_apply(self) -> Callable:
         plan = self.plan
@@ -367,16 +405,30 @@ class CompiledPipeline:
         return apply_fn
 
     def _build_fit_chunk(self) -> Callable:
-        """One streamed fit chunk: run upstream stages, build chunk first-pos.
+        """One streamed fit chunk: chunk first-occurrence positions + counts.
 
-        Fit always runs stage-at-a-time: it ends in a keyed reduction, not a
-        packed batch, so there is no output program to fuse into.
+        Legally-fused vocabs (pallas backend, ``fuse="auto"``) run their
+        whole chunk — upstream chains, hex decode, and the build — as ONE
+        streaming kernel (``kernels/dataflow.make_fit_dataflow``), with no
+        HBM tensor between upstream stages and ``vocab_build_chunk``.  The
+        rest take the staged path (per-stage kernels, then the build kernel),
+        restricted to exactly the stages the staged vocabs still need.
         """
         plan = self.plan
-        fit_ids = set(plan.fit_stage_ids)
-        fns = self._stage_fns(fit_ids)
+        fused_fit = self._fused_fit_programs
+        staged_vfs = [vf for vf in plan.vocab_fits
+                      if vf.vocab_id not in fused_fit]
+        if fused_fit:
+            staged_ids: set = set()
+            for vf in staged_vfs:
+                staged_ids.update(plan.fit_slice(vf))
+        else:
+            staged_ids = set(plan.fit_stage_ids)
+        fns = self._stage_fns(staged_ids)
+        fit_kernels = {vid: self._build_fit_dataflow_fn(fp)
+                       for vid, fp in fused_fit.items()}
         builds = {}
-        for vf in plan.vocab_fits:
+        for vf in staged_vfs:
             parts = 1 if vf.placement == "vmem" else max(
                 1, (4 * vf.capacity) // (4 << 20))
             if self.backend == "pallas":
@@ -396,7 +448,7 @@ class CompiledPipeline:
         def fit_chunk(cols):
             bufs = dict(self._assemble_sources_jnp(cols, fit_bufs))
             for s in plan.stages:
-                if s.stage_id not in fit_ids:
+                if s.stage_id not in staged_ids:
                     continue
                 if isinstance(s, FusedStage):
                     bufs[s.out_buf] = fns[s.stage_id](bufs[s.in_buf])
@@ -408,6 +460,11 @@ class CompiledPipeline:
                     raise AssertionError("lookup cannot precede fit")
             out = {}
             for vf in plan.vocab_fits:
+                if vf.vocab_id in fit_kernels:
+                    fp = fused_fit[vf.vocab_id]
+                    out[vf.vocab_id] = fit_kernels[vf.vocab_id](
+                        *(bufs[b] for b in fp.source_buffers))
+                    continue
                 vals = bufs[vf.in_buf].reshape(-1)
                 # first-occurrence positions + counts (frequency filter)
                 out[vf.vocab_id] = (builds[vf.vocab_id](vals),
@@ -551,15 +608,47 @@ class CompiledPipeline:
             }
         return rep
 
-    def traced_pallas_call_count(self, raw_batch: dict) -> int:
-        """Number of pallas_call primitives the apply program traces to.
+    def fit_lowering_report(self) -> dict:
+        """Per-vocab fit lowering decision: fused single-kernel vs staged.
 
-        With the fused lowering this equals ``len(plan.pack)`` — one
-        streaming kernel per output (the acceptance invariant); the staged
-        lowering traces one call per stage plus one per packer.
+        Keys are vocab ids; ``path`` is "fused" or "staged", and for staged
+        vocabs ``reason`` explains the fallback ("" means the backend/fuse
+        mode simply has no fit tile codegen).
         """
+        fpmap = {fp.vocab_id: fp for fp in self.plan.fit_dataflows}
+        rep = {}
+        for vf in self.plan.vocab_fits:
+            fp = fpmap.get(vf.vocab_id)
+            rep[vf.vocab_id] = {
+                "path": ("fused" if vf.vocab_id in self._fused_fit_programs
+                         else "staged"),
+                "legal": fp.legal if fp else False,
+                "reason": fp.reason if fp else "no fit program planned",
+                "n_stages": fp.n_stages if fp else 0,
+                "placement": vf.placement,
+            }
+        return rep
+
+    def traced_pallas_call_count(self, raw_batch: dict,
+                                 phase: str = "apply") -> int:
+        """Number of pallas_call primitives a phase's program traces to.
+
+        ``phase="apply"``: with the fused lowering this equals
+        ``len(plan.pack)`` — one streaming kernel per output (the acceptance
+        invariant); the staged lowering traces one call per stage plus one
+        per packer.  ``phase="fit"``: the fused fit chunk traces one call
+        per legally-fused vocab (plus the staged kernels of any fallback
+        vocab).
+        """
+        if phase not in ("apply", "fit"):
+            raise ValueError(f"unknown phase {phase!r}")
         if self.backend == "numpy":
             return 0
+        if phase == "fit":
+            cols = {k: jnp.asarray(v) for k, v in
+                    self._raw_columns(raw_batch, self._fit_bufs).items()}
+            jaxpr = jax.make_jaxpr(self._fit_chunk_fn)(cols)
+            return count_pallas_calls(jaxpr)
         tables, n_uniq = self._staged_table_args()
         cols = {k: jnp.asarray(v)
                 for k, v in self._raw_columns(raw_batch).items()}

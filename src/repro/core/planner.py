@@ -17,6 +17,12 @@ tables VMEM-resident, per-tile working set within budget).  Illegal programs
 fall back to stage-at-a-time lowering, so fusion is an optimization, never a
 constraint on expressible plans.
 
+The same pass covers the *fit* phase: each ``VocabFit`` gets a ``FitProgram``
+— the backward stage slice from its input buffer — whose legality check
+mirrors the apply one but accounts for the build-side accumulators (the
+chunk first-occurrence and count tables live in VMEM across the whole grid,
+so an HBM-placed capacity is illegal and falls back to the staged build).
+
 The plan is backend-neutral; compiler.py lowers it to numpy / jnp / Pallas.
 """
 
@@ -136,6 +142,31 @@ class DataflowProgram:
 
 
 @dataclasses.dataclass
+class FitProgram:
+    """Backward stage slice feeding one VocabFit (fit-phase fusion node).
+
+    When ``legal``, the compiler lowers the whole fit chunk for this vocab —
+    decode, elementwise bounding chains, cross joins — plus the chunk
+    first-occurrence + count build to ONE row-tiled streaming kernel, with
+    no intermediate HBM tensors between the upstream chains and the build.
+    When illegal (``reason`` says why, e.g. an HBM-placed capacity whose
+    accumulators cannot stay VMEM-resident), the vocab fits stage-at-a-time.
+    """
+
+    vocab_id: str
+    in_buf: str                    # VocabFit.in_buf (the value stream)
+    capacity: int
+    stage_ids: list[str]           # topo-ordered slice of plan.stages
+    source_buffers: list[str]      # raw inputs the slice reads
+    legal: bool = True
+    reason: str = ""
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.stage_ids)
+
+
+@dataclasses.dataclass
 class ExecutionPlan:
     buffers: dict[str, BufferSpec]
     stages: list  # topological order, apply phase
@@ -144,6 +175,7 @@ class ExecutionPlan:
     pack: list[PackOutput]
     source_buffers: list[str]
     dataflows: list[DataflowProgram] = dataclasses.field(default_factory=list)
+    fit_dataflows: list[FitProgram] = dataclasses.field(default_factory=list)
     # source buffer -> raw column names it reads (planner column-set export;
     # consumed by repro.session to push projection into any Source)
     source_columns: dict = dataclasses.field(default_factory=dict)
@@ -199,9 +231,9 @@ class ExecutionPlan:
         during fit when the fit Source is projected to this set."""
         return self._columns_for(self.fit_buffers())
 
-    def output_slice(self, po: PackOutput) -> list[str]:
-        """Topo-ordered stage ids in the backward slice of one output."""
-        needed = set(po.buffers)
+    def _slice_to(self, needed: set) -> list[str]:
+        """Topo-ordered stage ids in the backward slice of ``needed`` bufs."""
+        needed = set(needed)
         ids: list[str] = []
         for s in reversed(self.stages):
             if getattr(s, "out_buf", None) in needed:
@@ -211,6 +243,14 @@ class ExecutionPlan:
                     if b:
                         needed.add(b)
         return list(reversed(ids))
+
+    def output_slice(self, po: PackOutput) -> list[str]:
+        """Topo-ordered stage ids in the backward slice of one output."""
+        return self._slice_to(set(po.buffers))
+
+    def fit_slice(self, vf: VocabFit) -> list[str]:
+        """Topo-ordered stage ids in the backward slice of one vocab fit."""
+        return self._slice_to({vf.in_buf})
 
     # ---- Table-4 analogue: resource summary -----------------------------
     def resource_summary(self) -> dict:
@@ -354,11 +394,32 @@ class Planner:
                              source_buffers=source_buffers,
                              source_columns=source_columns)
         plan.dataflows = [self._build_dataflow(plan, po) for po in plan.pack]
+        plan.fit_dataflows = [self._build_fit_program(plan, vf)
+                              for vf in plan.vocab_fits]
         return plan
 
     # ---- step 6: plan-level fusion (one streaming program per output) ----
 
     FUSABLE_STAGES = (FusedStage, CrossStage, OneHotStage, VocabLookupStage)
+    # stateless kinds the fit-side tile codegen knows; a lookup can never
+    # legally precede a fit (tables are unfitted then), so it is excluded
+    FIT_FUSABLE_STAGES = (FusedStage, CrossStage, OneHotStage)
+
+    @staticmethod
+    def _slice_sources(stages, terminals) -> list[str]:
+        """Slice inputs (incl. terminals) that no slice stage produces."""
+        produced = {s.out_buf for s in stages}
+        consumed: list[str] = []
+        for s in stages:
+            for attr in ("in_buf", "in_a", "in_b"):
+                b = getattr(s, attr, None)
+                if b:
+                    consumed.append(b)
+        sources: list[str] = []
+        for b in consumed + list(terminals):
+            if b not in produced and b not in sources:
+                sources.append(b)
+        return sources
 
     def _build_dataflow(self, plan: ExecutionPlan, po: PackOutput,
                         *, block_rows: int = 256) -> DataflowProgram:
@@ -374,19 +435,8 @@ class Planner:
         """
         stage_ids = plan.output_slice(po)
         stages = [plan.stage_by_id(sid) for sid in stage_ids]
-
-        # source buffers = slice inputs that no slice stage produces
+        sources = self._slice_sources(stages, po.buffers)
         produced = {s.out_buf for s in stages}
-        sources: list[str] = []
-        consumed: list[str] = []
-        for s in stages:
-            for attr in ("in_buf", "in_a", "in_b"):
-                b = getattr(s, attr, None)
-                if b:
-                    consumed.append(b)
-        for b in consumed + list(po.buffers):
-            if b not in produced and b not in sources:
-                sources.append(b)
 
         vocab_ids: list[str] = []
         for s in stages:
@@ -427,6 +477,47 @@ class Planner:
                 reason=f"per-tile working set {working_set} exceeds "
                        f"budget {self.dataflow_vmem_budget}")
         return DataflowProgram(po.name, stage_ids, sources, vocab_ids)
+
+    def _build_fit_program(self, plan: ExecutionPlan, vf: VocabFit,
+                           *, block_rows: int = 256) -> FitProgram:
+        """Backward-slice the stages feeding ``vf`` and check fit legality.
+
+        Legal programs lower decode + bound + first-occurrence/count build to
+        a single row-tiled kernel, so the VMEM argument adds the build-side
+        accumulators: two int32[capacity] tables (chunk first-pos + counts)
+        stay resident across the whole grid.  An HBM-placed vocab therefore
+        falls back (its capacity is exactly what exceeded the table budget),
+        as does any stage kind the fit tile codegen does not know or an
+        over-budget working set — staged per vocab, never per pipeline.
+        """
+        stage_ids = plan.fit_slice(vf)
+        stages = [plan.stage_by_id(sid) for sid in stage_ids]
+        sources = self._slice_sources(stages, [vf.in_buf])
+
+        def illegal(reason: str) -> FitProgram:
+            return FitProgram(vf.vocab_id, vf.in_buf, vf.capacity,
+                              stage_ids, sources, legal=False, reason=reason)
+
+        if vf.placement != "vmem":
+            return illegal(
+                f"vocab {vf.vocab_id} is {vf.placement}-resident; the fused "
+                "fit kernel keeps first-pos/count accumulators in VMEM")
+        for s in stages:
+            if not isinstance(s, self.FIT_FUSABLE_STAGES):
+                return illegal(f"unsupported fit stage {type(s).__name__}")
+
+        produced = {s.out_buf for s in stages}
+        tile_bytes = 0
+        for b in set(sources) | produced:
+            spec = plan.buffers[b]
+            tile_bytes += block_rows * spec.bytes_per_row
+        accum_bytes = 2 * 4 * vf.capacity  # first-pos + counts, int32 each
+        working_set = 2 * tile_bytes + accum_bytes
+        if working_set > self.dataflow_vmem_budget:
+            return illegal(f"per-tile working set {working_set} exceeds "
+                           f"budget {self.dataflow_vmem_budget}")
+        return FitProgram(vf.vocab_id, vf.in_buf, vf.capacity,
+                          stage_ids, sources)
 
     @staticmethod
     def _fit_closure(stages, vocab_fits) -> list[str]:

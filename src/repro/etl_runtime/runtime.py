@@ -56,6 +56,10 @@ hanging it.
 Every stage records busy / wait-in / wait-out time (``stats.stages``), giving
 the paper's Fig-8-style per-stage breakdown consumed by
 ``benchmarks/bench_overlap.py``.
+
+The read stage is also available standalone as ``SourcePrefetcher`` —
+``EtlJob.fit`` uses it so the fit phase's (fused) chunk build overlaps
+source ingest exactly like apply overlaps training.
 """
 
 from __future__ import annotations
@@ -297,6 +301,43 @@ class _Stage(threading.Thread):
                 self.on_put(r)
 
 
+def _pump_source(source, out_q: CreditQueue, stats: StageStats,
+                 stop: threading.Event, *, wrap: Optional[Callable] = None,
+                 on_error: Optional[Callable[[BaseException], None]] = None
+                 ) -> None:
+    """The read stage's pump loop, shared by the executor's read thread and
+    the standalone ``SourcePrefetcher``: drain ``source`` into ``out_q``
+    with busy / wait-out accounting, then enqueue a stop-aware EOS (never a
+    blocking put into a full queue).  ``wrap(raw, idx)`` transforms each
+    item at read time (the executor stamps envelope metadata here);
+    ``on_error`` sets the failure policy (the executor stops the whole
+    pipeline, the prefetcher records and re-raises at the consumer)."""
+    try:
+        it = iter(source)
+        idx = 0
+        while not stop.is_set():
+            t0 = time.perf_counter()
+            try:
+                raw = next(it)
+                item = raw if wrap is None else wrap(raw, idx)
+            except StopIteration:
+                break
+            except Exception as e:
+                if on_error is not None:
+                    on_error(e)
+                return
+            stats.busy_s += time.perf_counter() - t0
+            idx += 1
+            t1 = time.perf_counter()
+            r = out_q.put(item)
+            stats.wait_out_s += time.perf_counter() - t1
+            if r is _STOPPED:
+                return
+            stats.items += 1
+    finally:
+        out_q.put(_EOS)
+
+
 def default_length_key(batch) -> float:
     """Length proxy for bucket_by_length: nonzero entries of the first
     2-D integer tensor (token count for LM batches), else 0.
@@ -379,6 +420,75 @@ class _SortStage(threading.Thread):
             self.stats.busy_s += time.perf_counter() - t1
             if len(buf) >= self.window and not self._flush(buf):
                 return
+
+
+class SourcePrefetcher:
+    """The executor's read stage, standalone: prefetch raw batches from a
+    Source through a credit-bounded, stop-aware queue on a background
+    thread.
+
+    ``EtlJob.fit`` wraps its (projected) fit Source in one of these so fit
+    ingest overlaps the fused chunk build — the reader fills the queue while
+    the device builds the previous chunk's first-occurrence tables — instead
+    of blocking the build on every disk read.  Iterating yields raw batches;
+    a reader error stops the stream and re-raises at the consumer (same
+    loud-failure contract as the full executor).  ``close()`` is prompt and
+    also closes a closeable Source.
+    """
+
+    def __init__(self, source, *, credits: int = 2, name: str = "fit-read"):
+        self._source = source
+        self._stop = threading.Event()
+        self._q = CreditQueue(max(1, credits), self._stop, name)
+        self.stats = StageStats(name)
+        self._error: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._read_loop,
+                                        name=f"etl-{name}", daemon=True)
+        self._started = False
+
+    def _read_loop(self):
+        def record(e: BaseException) -> None:
+            # end the stream but let already-queued batches deliver;
+            # the consumer re-raises at EOS
+            self._error = e
+
+        _pump_source(self._source, self._q, self.stats, self._stop,
+                     on_error=record)
+
+    def start(self) -> "SourcePrefetcher":
+        if not self._started:
+            self._thread.start()
+            self._started = True
+        return self
+
+    def __iter__(self):
+        self.start()
+        st = self.stats
+        while True:
+            t0 = time.perf_counter()
+            item = self._q.get()
+            st.wait_in_s += time.perf_counter() - t0
+            if item is _EOS or item is _STOPPED:
+                if item is _EOS:
+                    self._q.put(_EOS)  # re-arm: a later iteration ends too
+                if self._error is not None:
+                    raise RuntimeError("fit read stage failed") from self._error
+                return
+            yield item
+
+    def close(self) -> None:
+        self._stop.set()
+        if isinstance(self._source, Source):
+            self._source.close()
+        self._q.wake()
+        if self._started:
+            self._thread.join(timeout=5.0)
+
+    def __enter__(self) -> "SourcePrefetcher":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
 
 class StreamingExecutor:
@@ -528,36 +638,17 @@ class StreamingExecutor:
     # ---- read stage (source iterators don't fit the queue-in shape) ------
 
     def _read_loop(self):
-        st = self.stats.stages["read"]
-        try:
-            it = iter(self._source)
-            idx = 0
-            while not self._stop.is_set():
-                t0 = time.perf_counter()
-                try:
-                    raw = next(it)
-                    # envelope metadata is computed host-side at read time:
-                    # the ordering key never touches downstream device work
-                    key = (float(self._host_key_fn(raw))
-                           if self._host_key_fn is not None else None)
-                    arrival = (self._arrival_fn(idx)
-                               if self._arrival_fn is not None else None)
-                except StopIteration:
-                    break
-                except Exception as e:
-                    self._on_error(e)
-                    return
-                st.busy_s += time.perf_counter() - t0
-                idx += 1
-                t1 = time.perf_counter()
-                r = self._raw_q.put(_Envelope(raw, key, arrival))
-                st.wait_out_s += time.perf_counter() - t1
-                if r is _STOPPED:
-                    return
-                st.items += 1
-        finally:
-            # stop-aware EOS: never a blocking put into a full queue
-            self._raw_q.put(_EOS)
+        def wrap(raw, idx):
+            # envelope metadata is computed host-side at read time:
+            # the ordering key never touches downstream device work
+            key = (float(self._host_key_fn(raw))
+                   if self._host_key_fn is not None else None)
+            arrival = (self._arrival_fn(idx)
+                       if self._arrival_fn is not None else None)
+            return _Envelope(raw, key, arrival)
+
+        _pump_source(self._source, self._raw_q, self.stats.stages["read"],
+                     self._stop, wrap=wrap, on_error=self._on_error)
 
     # ---- adaptive credits (occupancy-sized staging budget) ---------------
 

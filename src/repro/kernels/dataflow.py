@@ -24,6 +24,16 @@ factories, in increasing order of fusion:
     (packing is the kernel's epilogue).  Each byte of the stream crosses
     HBM exactly twice: raw in, packed out.
 
+``make_fit_dataflow``
+    The fit-phase sibling: the backward slice of one ``VocabFit`` — decode,
+    bounding chains, joins — plus the chunk first-occurrence + count build
+    as ONE row-tiled kernel.  The two int32[capacity] accumulators are the
+    kernel outputs, revisited by every grid step (the paper's VocabGen keyed
+    reduction as a grid-carried VMEM table); value tiles never round-trip to
+    HBM between the upstream chains and the build.  The scatter form
+    (``.at[].min`` / ``.at[].add``) replaces the staged build kernel's
+    RAW-serialized loop — the whole tile updates per step.
+
 Vocabulary tables enter the dataflow kernel pre-resolved: the compiler folds
 the OOV rule (``miss -> n_unique``) into the table before the call, so the
 in-kernel lookup is a pure partitionable gather.
@@ -252,5 +262,100 @@ def make_output_dataflow(inputs: Sequence[StreamInput],
             interpret=interpret,
         )(*padded_srcs, *tbls)
         return out[:rows]
+
+    return run
+
+
+# ---------------------------------------------------------------------------
+# The fused per-vocab streaming *fit* kernel
+# ---------------------------------------------------------------------------
+
+ABSENT32 = 2 ** 31 - 1  # matches kernels.vocab / kernels.ref chunk sentinel
+
+
+def make_fit_dataflow(inputs: Sequence[StreamInput],
+                      steps: Sequence[TileStep],
+                      value_buf: str, capacity: int, *,
+                      block_rows: int = 256, interpret: bool = True):
+    """Build fn(*sources) -> (first_pos int32[capacity], counts int32[capacity]).
+
+    One ``pallas_call``: row tiles of every raw source stream through the
+    ``TileStep`` chain (map/join only — lookups cannot precede a fit), the
+    resulting ``value_buf`` tile is flattened row-major, and the chunk
+    first-occurrence positions and occurrence counts accumulate into two
+    VMEM-resident tables revisited by every grid step.  Semantics match the
+    staged path exactly: positions are global row-major flat offsets over the
+    unpadded chunk, ``ABSENT32`` marks values absent from the chunk, and
+    counts sum every occurrence (the frequency-filter input).
+
+    The build uses whole-tile scatter updates rather than the staged
+    kernel's serial fori_loop; like the in-kernel one-hot of the apply
+    dataflow this is interpret-mode-validated — real-TPU Mosaic lowering is
+    tracked as a ROADMAP hardware-pass item.
+    """
+    inputs = list(inputs)
+    steps = list(steps)
+    n_src = len(inputs)
+
+    def kernel(*refs, n_rows: int):
+        src_refs, fp_ref, cnt_ref = refs[:n_src], refs[-2], refs[-1]
+
+        @pl.when(pl.program_id(0) == 0)
+        def _init():
+            fp_ref[...] = jnp.full_like(fp_ref, ABSENT32)
+            cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+        env = {inp.name: r[...] for inp, r in zip(inputs, src_refs)}
+        for st in steps:
+            if st.kind == "map":
+                env[st.out] = st.fn(env[st.args[0]])
+            elif st.kind == "join":
+                env[st.out] = st.fn(env[st.args[0]], env[st.args[1]])
+            else:  # pragma: no cover - legality pass rejects lookups
+                raise NotImplementedError(st.kind)
+        vals = env[value_buf]
+        br, width = vals.shape
+        # global row-major flat position of each element; padding rows are
+        # masked out (position -> ABSENT32 so min is a no-op, count += 0)
+        row = pl.program_id(0) * br + jax.lax.broadcasted_iota(
+            jnp.int32, vals.shape, 0)
+        col = jax.lax.broadcasted_iota(jnp.int32, vals.shape, 1)
+        # match the staged build kernel's in-bounds check exactly: values
+        # >= capacity drop via the scatter's OOB rule, but negatives must be
+        # masked here — JAX index normalization would wrap them to the end
+        # of the table instead of dropping them
+        ok = (row < n_rows) & (vals >= 0)
+        pos = jnp.where(ok, row * width + col, ABSENT32).reshape(-1)
+        idx = jnp.where(ok, vals, 0).reshape(-1)  # masked entries are no-ops
+        one = jnp.where(ok, 1, 0).astype(jnp.int32).reshape(-1)
+        fp_ref[...] = fp_ref[...].at[0, idx].min(pos)
+        cnt_ref[...] = cnt_ref[...].at[0, idx].add(one)
+
+    def run(*srcs):
+        assert len(srcs) == n_src, (len(srcs), n_src)
+        rows = srcs[0].shape[1] if inputs[0].hex_width else srcs[0].shape[0]
+        br = min(block_rows, _round_up(rows, 8))
+        rp = _round_up(rows, br)
+        padded_srcs, in_specs = [], []
+        for inp, x in zip(inputs, srcs):
+            if inp.hex_width:
+                padded_srcs.append(jnp.pad(x, ((0, 0), (0, rp - rows), (0, 0))))
+                in_specs.append(pl.BlockSpec((inp.hex_width, br, inp.width),
+                                             lambda r: (0, r, 0)))
+            else:
+                padded_srcs.append(jnp.pad(x, ((0, rp - rows), (0, 0))))
+                in_specs.append(pl.BlockSpec((br, inp.width),
+                                             lambda r: (r, 0)))
+        fp, cnt = pl.pallas_call(
+            functools.partial(kernel, n_rows=rows),
+            grid=(rp // br,),
+            in_specs=in_specs,
+            out_specs=[pl.BlockSpec((1, capacity), lambda r: (0, 0)),
+                       pl.BlockSpec((1, capacity), lambda r: (0, 0))],
+            out_shape=[jax.ShapeDtypeStruct((1, capacity), jnp.int32),
+                       jax.ShapeDtypeStruct((1, capacity), jnp.int32)],
+            interpret=interpret,
+        )(*padded_srcs)
+        return fp[0], cnt[0]
 
     return run

@@ -39,6 +39,17 @@ def output_dataflow(inputs, tables, steps, terminals, out_dtype, *,
         pad_cols_to=pad_cols_to, block_rows=block_rows, interpret=interpret))
 
 
+def fit_dataflow(inputs, steps, value_buf, capacity, *,
+                 block_rows=256, interpret=None):
+    """One VocabFit's full fit chunk (decode + bound + first-pos/count
+    build) as a single Pallas kernel."""
+    if interpret is None:
+        interpret = default_interpret()
+    return jax.jit(_dataflow.make_fit_dataflow(
+        inputs, steps, value_buf, capacity,
+        block_rows=block_rows, interpret=interpret))
+
+
 @functools.partial(jax.jit, static_argnames=("capacity", "partitions", "interpret"))
 def vocab_build_chunk(values, *, capacity, partitions=1, interpret=None):
     if interpret is None:

@@ -24,6 +24,10 @@ What the facade does for you:
   (``ExecutionPlan.referenced_columns``) and the job projects the Source to
   it, so a columnar dataset never materializes unreferenced columns; the
   fit phase is projected to the (smaller) vocab-fit closure.
+- **overlapped fit ingest**: ``fit()`` drives the projected read through
+  the executor's read stage (``SourcePrefetcher``), so the fused chunk
+  build overlaps the next chunk's read instead of blocking on it
+  (``fit_read_stats`` has the read-stage occupancy).
 - **semantics overrides**: ``freshness=`` / ``ordering=`` replace the
   pipeline template's policies for this job without rebuilding the DAG.
 - **executor lifecycle**: ``batches()`` starts the staged prefetching
@@ -49,8 +53,8 @@ from repro.core.pipeline import Pipeline
 from repro.core.semantics import (FreshnessPolicy, OrderingPolicy,
                                   PipelineSemantics)
 from repro.data.source import Source, as_source
-from repro.etl_runtime.runtime import (RuntimeStats, StreamingExecutor,
-                                       default_length_key)
+from repro.etl_runtime.runtime import (RuntimeStats, SourcePrefetcher,
+                                       StreamingExecutor, default_length_key)
 
 
 class EtlJob:
@@ -118,6 +122,7 @@ class EtlJob:
         self.name = name or getattr(pipeline, "name", "etl-job")
         self._executor: Optional[StreamingExecutor] = None
         self._last_stats: Optional[RuntimeStats] = None
+        self._fit_read_stats = None  # StageStats of the last fit read stage
 
     # ---- compile ---------------------------------------------------------
 
@@ -176,10 +181,18 @@ class EtlJob:
 
     # ---- fit -------------------------------------------------------------
 
-    def fit(self, source=None):
+    def fit(self, source=None, *, prefetch: bool = True):
         """Fit phase: learn vocabulary tables from ``source`` (default: the
         job's ``fit_source``, else its apply source), with the fit read
-        projected to the vocab-fit closure's columns."""
+        projected to the vocab-fit closure's columns.
+
+        The projected read runs through the staged executor's read stage
+        (``SourcePrefetcher``): a background reader fills a credit-bounded
+        queue while the (fused) chunk build consumes, so fit ingest overlaps
+        the build instead of blocking on the reader.  ``prefetch=False``
+        keeps the old inline iteration (debugging / deterministic traces);
+        read-stage occupancy lands in ``fit_read_stats``.
+        """
         src = source if source is not None else (self._fit_source
                                                  or self._source)
         plan = getattr(self.compiled, "plan", None)
@@ -187,10 +200,22 @@ class EtlJob:
             if plan is None or not plan.vocab_fits:
                 return self.compiled.fit(iter(()))  # stateless: bump version
             raise ValueError("fit requires a source (pipeline has vocabs)")
+        if plan is not None and not plan.vocab_fits:
+            return self.compiled.fit(iter(()))  # stateless: no read needed
         src = as_source(src)
         if plan is not None:
             src = self._project(src, plan.fit_referenced_columns())
-        return self.compiled.fit(iter(src))
+        if not prefetch:
+            return self.compiled.fit(iter(src))
+        reader = SourcePrefetcher(
+            src, credits=self._executor_kw["credits"],
+            name=f"{self.name}-fit-read")
+        try:
+            state = self.compiled.fit(iter(reader))
+        finally:
+            reader.close()
+            self._fit_read_stats = reader.stats
+        return state
 
     # ---- apply (one-shot, bench/debug path) ------------------------------
 
@@ -267,6 +292,16 @@ class EtlJob:
 
     def lowering_report(self) -> dict:
         return self.compiled.lowering_report()
+
+    def fit_lowering_report(self) -> dict:
+        return self.compiled.fit_lowering_report()
+
+    @property
+    def fit_read_stats(self):
+        """StageStats of the last ``fit()`` read stage (None before fit or
+        with ``prefetch=False``): busy = source reads, wait_out = reader
+        ahead of the build, wait_in = build waited on ingest."""
+        return self._fit_read_stats
 
 
 def streaming_executor(pipeline, source, **kw) -> StreamingExecutor:

@@ -3,3 +3,5 @@ import sys
 
 # src-layout import path (tests run as `PYTHONPATH=src pytest tests/`)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# vendored test helpers (tests/proptest.py) importable regardless of rootdir
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -1,0 +1,294 @@
+"""Minimal vendored property-test harness (ROADMAP follow-on).
+
+``hypothesis`` used to be an optional test dependency and the property suite
+skipped without it.  This module vendors the subset the suite needs so the
+properties always run; ``tests/test_property.py`` still prefers hypothesis as
+a fast path when it happens to be installed.
+
+API (mirrors the hypothesis subset the suite uses)::
+
+    from proptest import given, strategies as st
+
+    @given(st.lists(st.integers(0, 63), min_size=1, max_size=200))
+    def test_prop(vals):
+        ...
+
+Design:
+
+- **Seeded**: each test draws from a ``numpy`` Generator seeded from the
+  test's name, so runs are deterministic and failures reproduce.
+- **Sized**: early examples are small (size grows with the example index),
+  so trivial counterexamples surface before large ones.
+- **Shrinking**: on failure the harness greedily minimizes the example —
+  each strategy proposes simpler candidates (toward 0 / shorter lists /
+  fewer rows) and the first candidate that still fails becomes the new
+  example, until a fixpoint — then re-raises the original exception with
+  the minimal falsifying example prepended to its message.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+from typing import Optional, Sequence
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 25
+SHRINK_BUDGET = 400  # candidate evaluations per failing test
+
+
+class Strategy:
+    """Base strategy: ``generate(rng, size)`` draws one value; ``shrink(v)``
+    yields strictly-simpler candidates, simplest first."""
+
+    def generate(self, rng: np.random.Generator, size: int):
+        raise NotImplementedError
+
+    def shrink(self, value):
+        return iter(())
+
+
+class _Integers(Strategy):
+    def __init__(self, lo: int, hi: int):
+        if lo > hi:
+            raise ValueError(f"empty integer range [{lo}, {hi}]")
+        self.lo, self.hi = int(lo), int(hi)
+        # shrink target: 0 when in range, else the boundary nearest 0
+        self.target = min(max(0, self.lo), self.hi)
+
+    def generate(self, rng, size):
+        # bias early examples toward the target and the boundaries —
+        # off-by-one bugs live there
+        if size <= 2 or rng.random() < 0.25:
+            return int(rng.choice([self.lo, self.hi, self.target]))
+        span = min(self.hi - self.lo, max(1, 2 ** min(size, 62)))
+        lo = max(self.lo, self.target - span)
+        hi = min(self.hi, self.target + span)
+        return int(rng.integers(lo, hi + 1))
+
+    def shrink(self, v):
+        if v == self.target:
+            return
+        yield self.target
+        mid = self.target + (v - self.target) // 2
+        if mid not in (v, self.target):
+            yield mid
+        step = v - 1 if v > self.target else v + 1
+        if step != mid:
+            yield step
+
+
+class _Floats(Strategy):
+    def __init__(self, lo: float, hi: float, allow_nan: bool = False):
+        if lo > hi:
+            raise ValueError(f"empty float range [{lo}, {hi}]")
+        self.lo, self.hi = float(lo), float(hi)
+        self.allow_nan = allow_nan
+        self.target = min(max(0.0, self.lo), self.hi)
+
+    def generate(self, rng, size):
+        if self.allow_nan and rng.random() < 0.05:
+            return float("nan")
+        if size <= 2 or rng.random() < 0.25:
+            return float(rng.choice([self.lo, self.hi, self.target]))
+        return float(rng.uniform(self.lo, self.hi))
+
+    def shrink(self, v):
+        if v != v:  # nan shrinks to the target (a finite reproducer)
+            yield self.target
+            return
+        if v == self.target:
+            return
+        yield self.target
+        mid = self.target + (v - self.target) / 2
+        if mid not in (v, self.target):
+            yield mid
+        as_int = float(int(v))
+        if self.lo <= as_int <= self.hi and as_int != v:
+            yield as_int
+
+
+class _Lists(Strategy):
+    def __init__(self, elements: Strategy, min_size: int = 0,
+                 max_size: int = 32):
+        if min_size > max_size:
+            raise ValueError("min_size > max_size")
+        self.elements = elements
+        self.min_size, self.max_size = int(min_size), int(max_size)
+
+    def generate(self, rng, size):
+        hi = min(self.max_size, max(self.min_size, size * 4))
+        n = int(rng.integers(self.min_size, hi + 1))
+        return [self.elements.generate(rng, size) for _ in range(n)]
+
+    def shrink(self, v):
+        n = len(v)
+        # structural shrinks first: drop whole spans, then halves, then
+        # single elements; finally shrink elements pointwise
+        if n > self.min_size:
+            keep = max(self.min_size, n // 2)
+            yield list(v[:keep])
+            yield list(v[n - keep:])
+            for i in range(n):
+                if n - 1 >= self.min_size:
+                    yield v[:i] + v[i + 1:]
+        for i, x in enumerate(v):
+            for cand in self.elements.shrink(x):
+                yield v[:i] + [cand] + v[i + 1:]
+
+
+class _Arrays(Strategy):
+    """ndarray of ``dtype`` with shape drawn per-dim from ``shape``
+    (ints or integer Strategies); ``elements`` bounds the values."""
+
+    def __init__(self, dtype, shape, elements: Optional[Strategy] = None):
+        self.dtype = np.dtype(dtype)
+        self.shape = tuple(shape) if isinstance(shape, (tuple, list)) \
+            else (shape,)
+        if elements is None:
+            elements = (_Floats(-1e6, 1e6)
+                        if self.dtype.kind == "f" else _Integers(0, 2 ** 15))
+        self.elements = elements
+
+    def _dims(self, rng, size):
+        return tuple(d.generate(rng, size) if isinstance(d, Strategy) else int(d)
+                     for d in self.shape)
+
+    def generate(self, rng, size):
+        dims = self._dims(rng, size)
+        flat = [self.elements.generate(rng, size)
+                for _ in range(int(np.prod(dims)) if dims else 1)]
+        return np.asarray(flat, self.dtype).reshape(dims)
+
+    def shrink(self, v):
+        # shrink the leading dim (rows), then values toward the target
+        if v.ndim and v.shape[0] > 1:
+            yield v[:max(1, v.shape[0] // 2)].copy()
+            yield v[:-1].copy()
+        flat = v.reshape(-1)
+        for i in range(flat.size):
+            for cand in self.elements.shrink(flat[i].item()):
+                out = flat.copy()
+                out[i] = cand
+                yield out.reshape(v.shape)
+
+
+class _ColumnDicts(Strategy):
+    """Raw columnar batch: ``{name: 1-D array}`` sharing one row count —
+    the shape every Source / pipeline ingest path consumes."""
+
+    def __init__(self, columns: dict, rows: Strategy):
+        # columns: name -> dtype or (dtype, element Strategy)
+        self.columns = {
+            name: (np.dtype(spec[0]), spec[1]) if isinstance(spec, tuple)
+            else (np.dtype(spec), None)
+            for name, spec in columns.items()}
+        self.rows = rows
+
+    def generate(self, rng, size):
+        n = self.rows.generate(rng, size)
+        out = {}
+        for name, (dtype, elems) in self.columns.items():
+            arr = _Arrays(dtype, (n,), elems)
+            out[name] = arr.generate(rng, size)
+        return out
+
+    def shrink(self, v):
+        n = len(next(iter(v.values())))
+        for keep in (max(1, n // 2), n - 1):
+            if 0 < keep < n:
+                yield {k: a[:keep].copy() for k, a in v.items()}
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies`` for the used subset."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> Strategy:
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def floats(min_value: float, max_value: float, *,
+               allow_nan: bool = False) -> Strategy:
+        return _Floats(min_value, max_value, allow_nan)
+
+    @staticmethod
+    def lists(elements: Strategy, *, min_size: int = 0,
+              max_size: int = 32) -> Strategy:
+        return _Lists(elements, min_size, max_size)
+
+    @staticmethod
+    def arrays(dtype, shape, *, elements: Optional[Strategy] = None) -> Strategy:
+        return _Arrays(dtype, shape, elements)
+
+    @staticmethod
+    def column_dicts(columns: dict, *,
+                     rows: Optional[Strategy] = None) -> Strategy:
+        return _ColumnDicts(columns, rows or _Integers(1, 64))
+
+
+def _shrink_example(fails, strategies_seq: Sequence[Strategy], example: list):
+    """Greedy fixpoint minimization under a candidate-evaluation budget."""
+    budget = SHRINK_BUDGET
+    improved = True
+    while improved and budget > 0:
+        improved = False
+        for i, strat in enumerate(strategies_seq):
+            for cand in strat.shrink(example[i]):
+                budget -= 1
+                trial = list(example)
+                trial[i] = cand
+                if fails(trial):
+                    example = trial
+                    improved = True
+                    break
+                if budget <= 0:
+                    break
+            if improved or budget <= 0:
+                break
+    return example
+
+
+def given(*strats: Strategy, max_examples: int = DEFAULT_MAX_EXAMPLES):
+    """Decorator: run the test over ``max_examples`` generated examples,
+    shrinking (and re-raising with) the minimal falsifying example."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = np.random.default_rng(seed)
+            for i in range(max_examples):
+                size = 1 + i // 2  # examples grow as confidence does
+                example = [s.generate(rng, size) for s in strats]
+                try:
+                    fn(*args, *example, **kwargs)
+                except Exception:
+                    def fails(ex):
+                        try:
+                            fn(*args, *ex, **kwargs)
+                            return False
+                        except Exception:
+                            return True
+
+                    minimal = _shrink_example(fails, strats, example)
+                    try:
+                        fn(*args, *minimal, **kwargs)
+                    except Exception as e:
+                        head = e.args[0] if e.args else ""
+                        e.args = ((f"Falsifying example (shrunk, seed={seed}):"
+                                   f" {minimal!r}\n{head}"),) + e.args[1:]
+                        raise
+                    raise  # flaky shrink target: surface the original
+            return None
+
+        # hide the generated parameters from pytest's fixture resolution
+        # (hypothesis does the same); params beyond the strategies — e.g.
+        # pytest fixtures — stay visible and are forwarded via *args
+        extra = list(inspect.signature(fn).parameters.values())[len(strats):]
+        wrapper.__signature__ = inspect.Signature(extra)
+        return wrapper
+
+    return deco

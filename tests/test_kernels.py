@@ -49,6 +49,37 @@ def test_vocab_build_sweep(cap, parts, n):
     np.testing.assert_array_equal(got, want)
 
 
+@pytest.mark.parametrize("rows,width,cap", [(8, 3, 64), (100, 7, 128),
+                                            (257, 1, 32)])
+def test_fit_dataflow_matches_staged_build(rows, width, cap):
+    """Fused fit kernel == staged build kernel + counts oracle, including
+    out-of-range values: negatives and >= capacity drop on both paths
+    (regression: JAX scatter index normalization must not wrap -1 to the
+    last table slot)."""
+    from repro.kernels.dataflow import StreamInput, make_fit_dataflow
+
+    vals = RNG.integers(0, cap, size=(rows, width)).astype(np.int32)
+    vals.reshape(-1)[:: max(1, vals.size // 7)] = -1       # missing ids
+    if vals.size > 3:
+        vals.reshape(-1)[1] = cap + 5                      # overflow id
+    fn = make_fit_dataflow([StreamInput("v", width, np.dtype(np.int32))],
+                           [], "v", cap, interpret=True)
+    got_fp, got_cnt = (np.asarray(a) for a in fn(jnp.asarray(vals)))
+    flat = vals.reshape(-1)
+    want_fp = np.full(cap, 2 ** 31 - 1, np.int32)
+    want_cnt = np.zeros(cap, np.int32)
+    for i, v in enumerate(flat):
+        if 0 <= v < cap:
+            want_fp[v] = min(want_fp[v], i)
+            want_cnt[v] += 1
+    np.testing.assert_array_equal(got_fp, want_fp)
+    np.testing.assert_array_equal(got_cnt, want_cnt)
+    # the staged Pallas build drops out-of-range values too: bit-equal
+    staged = np.asarray(ops.vocab_build_chunk(
+        jnp.asarray(flat), capacity=cap, partitions=1, interpret=True))
+    np.testing.assert_array_equal(got_fp, staged)
+
+
 @pytest.mark.parametrize("rows,cols,cap,parts", [(8, 3, 64, 4), (100, 26, 128, 1),
                                                  (33, 7, 256, 8)])
 def test_vocab_lookup_sweep(rows, cols, cap, parts):

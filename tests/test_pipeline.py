@@ -223,6 +223,106 @@ def test_fused_lm_token_pipeline():
     _assert_outputs_match(ref(raw), fused(raw), "lm")
 
 
+# ---------------- fused streaming *fit* dataflow ------------------------------
+
+
+def _state_tables(p):
+    """Vocab tables in plan order (ids differ per pipeline instance)."""
+    return [np.asarray(t) for t in p.state.tables.values()]
+
+
+def _assert_states_match(want, got, msg):
+    for a, b in zip(_state_tables(want), _state_tables(got)):
+        np.testing.assert_array_equal(a, b, err_msg=msg)
+    assert list(want.state.n_unique.values()) == \
+        list(got.state.n_unique.values()), msg
+    assert want.state.version == got.state.version, msg
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("which", ["II", "III"])
+def test_fused_fit_bit_equal_across_lowerings(which, raw_batch):
+    """Fused fit == staged fit == numpy oracle: identical PipelineState
+    (first-occurrence ranks + frequency counts) on the hex-column paper
+    pipelines, and the downstream apply agrees end to end."""
+    ref = paper_pipeline(which, modulus=4096, small_vocab=2048,
+                         large_vocab=8192).compile(backend="numpy")
+    ref.fit(_fit_batches())
+    want = ref(raw_batch)
+    for fuse in ["auto", "off"]:
+        p = paper_pipeline(which, modulus=4096, small_vocab=2048,
+                           large_vocab=8192).compile(backend="pallas",
+                                                     fuse=fuse)
+        p.fit(_fit_batches())
+        _assert_states_match(ref, p, f"{which}/fuse={fuse}")
+        _assert_outputs_match(want, p(raw_batch), f"fit/{which}/fuse={fuse}")
+        paths = {v["path"] for v in p.fit_lowering_report().values()}
+        assert paths == ({"fused"} if fuse == "auto" else {"staged"})
+
+
+def test_fused_fit_min_count_counts_bit_equal(raw_batch):
+    """The fused kernel's in-kernel counts drive the frequency filter to the
+    same filtered table as the staged bincount path."""
+    ref = paper_pipeline("II", small_vocab=2048,
+                         min_count=3).compile(backend="numpy")
+    fused = paper_pipeline("II", small_vocab=2048,
+                           min_count=3).compile(backend="pallas")
+    assert all(v["path"] == "fused"
+               for v in fused.fit_lowering_report().values())
+    for c in (ref, fused):
+        c.fit(_fit_batches())
+    _assert_states_match(ref, fused, "min_count")
+
+
+def test_fused_fit_non_hex_token_vocab():
+    """A non-hex (token-sequence) vocab fuses its fit too: SigridHash chain
+    + first-occurrence build in one kernel, bit-equal to the oracle."""
+    def build():
+        p = Pipeline(Schema.lm_events(32), batch_size=64)
+        t = p.tokens("tokens_raw") | O.SigridHash(512) | Vocab(512)
+        p.output("tokens", [t], dtype=np.int32)
+        return p
+
+    def fitb():
+        return synth.lm_event_batches(32, rows=256, batch_size=64, seed=3)
+
+    ref = build().compile(backend="numpy")
+    ref.fit(fitb())
+    fused = build().compile(backend="pallas")
+    (rep,) = fused.fit_lowering_report().values()
+    assert rep["path"] == "fused" and rep["n_stages"] == 1
+    fused.fit(fitb())
+    _assert_states_match(ref, fused, "token-vocab")
+
+
+def test_fused_fit_fallback_hbm_vocab():
+    """HBM-placed capacities fall back to the staged fit build (their
+    first-pos/count accumulators cannot stay VMEM-resident) and still
+    produce a bit-identical state."""
+    p = paper_pipeline("III", large_vocab=2 ** 21).compile(backend="pallas")
+    (rep,) = p.fit_lowering_report().values()
+    assert rep["path"] == "staged" and not rep["legal"]
+    assert "hbm" in rep["reason"] and rep["placement"] == "hbm"
+    ref = paper_pipeline("III", large_vocab=2 ** 21).compile(backend="numpy")
+    for c in (p, ref):
+        c.fit(_fit_batches())
+    _assert_states_match(ref, p, "hbm-fit-fallback")
+
+
+def test_fused_fit_single_pallas_call_per_vocab(raw_batch):
+    """The fit acceptance invariant: the fused fit chunk traces to exactly
+    one pallas_call per legally-fused vocab; the staged lowering traces
+    more (per-stage kernels + the build kernel)."""
+    p = paper_pipeline("II", small_vocab=2048).compile(backend="pallas")
+    n_fused = sum(1 for v in p.fit_lowering_report().values()
+                  if v["path"] == "fused")
+    assert n_fused == len(p.plan.vocab_fits) == 1
+    assert p.traced_pallas_call_count(raw_batch, phase="fit") == n_fused
+    staged = paper_pipeline("II", small_vocab=2048).compile(backend="pallas",
+                                                            fuse="off")
+    assert staged.traced_pallas_call_count(raw_batch, phase="fit") > n_fused
+
+
 def test_frequency_filter_backend_equality(raw_batch):
     """Pipeline II with min_count=3: rare ids -> OOV, all backends agree."""
     outs = {}

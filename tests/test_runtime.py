@@ -14,8 +14,9 @@ from repro.core.semantics import (BatchingPolicy, FreshnessPolicy,
                                   OrderingPolicy, PipelineSemantics)
 from repro.data import columnar, synth
 from repro.etl_runtime.multitenant import PipelineManager
-from repro.etl_runtime.runtime import (CreditQueue, StreamingExecutor,
-                                       _STOPPED)
+from repro.data.source import Source
+from repro.etl_runtime.runtime import (CreditQueue, SourcePrefetcher,
+                                       StreamingExecutor, _STOPPED)
 
 
 def _pipe(backend="jnp"):
@@ -89,6 +90,62 @@ def test_credit_queue_put_is_stop_aware():
     assert q.put("y") is _STOPPED          # returns instead of hanging
     assert q.get() is _STOPPED
     assert time.perf_counter() - t0 < 1.0
+
+
+def test_source_prefetcher_delivers_all_in_order():
+    """The standalone read stage yields every batch in order and records
+    read-stage occupancy (EtlJob.fit's ingest overlap path)."""
+    batches = [{"i": np.full(4, k)} for k in range(7)]
+    pf = SourcePrefetcher(Source.stream(lambda: iter(batches)), credits=2)
+    got = list(pf)
+    assert [int(b["i"][0]) for b in got] == list(range(7))
+    assert pf.stats.items == 7
+    pf.close()
+
+
+def test_source_prefetcher_overlaps_reader_with_consumer():
+    """While the consumer works on chunk k, the reader prefetches ahead —
+    total wall time is max(read, consume), not the sum."""
+    read_s, consume_s, n = 0.02, 0.02, 6
+
+    def gen():
+        for k in range(n):
+            time.sleep(read_s)
+            yield {"i": np.full(2, k)}
+
+    pf = SourcePrefetcher(Source.stream(gen), credits=2)
+    t0 = time.perf_counter()
+    for _ in pf:
+        time.sleep(consume_s)
+    wall = time.perf_counter() - t0
+    serial = n * (read_s + consume_s)
+    assert wall < serial * 0.8, (wall, serial)  # reads hid behind consumes
+    pf.close()
+
+
+def test_source_prefetcher_error_reraises_at_consumer():
+    def gen():
+        yield {"i": np.zeros(2)}
+        raise OSError("disk gone")
+
+    pf = SourcePrefetcher(Source.stream(gen), credits=2)
+    it = iter(pf)
+    next(it)
+    with pytest.raises(RuntimeError, match="fit read stage failed"):
+        list(it)
+
+
+def test_source_prefetcher_close_unblocks_full_queue():
+    """close() is prompt even when the reader is parked on a full queue."""
+    many = ({"i": np.zeros(2)} for _ in range(10_000))
+    pf = SourcePrefetcher(Source.stream(lambda: many), credits=1)
+    it = iter(pf)
+    next(it)  # start the reader; it will fill the queue and block
+    time.sleep(0.05)
+    t0 = time.perf_counter()
+    pf.close()
+    assert time.perf_counter() - t0 < 2.0
+    assert not pf._thread.is_alive()
 
 
 def test_executor_backpressure_bounds_inflight():

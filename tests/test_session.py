@@ -164,6 +164,40 @@ def test_facade_output_bit_equal_to_direct_path(dataset_dir):
                                       np.asarray(via_job[k]))
 
 
+def test_job_fit_prefetch_bit_equal_to_inline_and_overlaps():
+    """fit() through the read-stage prefetcher produces the same state as
+    the inline iteration and records read-stage occupancy."""
+    def build():
+        return EtlJob(paper_pipeline("II", small_vocab=512, batch_size=500),
+                      backend="pallas",
+                      fit_source=Source.synth("I", rows=1500,
+                                              batch_size=500, seed=7))
+    pre = build()
+    pre.fit()
+    assert pre.fit_read_stats is not None and pre.fit_read_stats.items == 3
+    inline = build()
+    inline.fit(prefetch=False)
+    assert inline.fit_read_stats is None
+    for a, b in zip(pre.state.tables.values(), inline.state.tables.values()):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert list(pre.state.n_unique.values()) == \
+        list(inline.state.n_unique.values())
+
+
+def test_job_fit_lowering_report_and_reader_error():
+    job = EtlJob(paper_pipeline("II", small_vocab=512, batch_size=500),
+                 backend="pallas")
+    assert all(v["path"] == "fused"
+               for v in job.fit_lowering_report().values())
+
+    def bad_feed():
+        yield next(synth.dataset_batches("I", rows=100, batch_size=100))
+        raise OSError("fit shard lost")
+
+    with pytest.raises(RuntimeError, match="fit read stage failed"):
+        job.fit(Source.stream(bad_feed))
+
+
 # ---------------- host-side length keys (ROADMAP follow-on) ----------------
 
 def _varlen_source():
