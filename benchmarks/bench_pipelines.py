@@ -1,19 +1,38 @@
 """Fig 13/15/16 analogue: Pipeline I/II/III latency across implementations
 and datasets (scaled; derived column = Mrows/s and MB/s, scale-free).
 
-The ``pallas`` rows use the fused per-output streaming dataflow lowering
-(one kernel per PackOutput); ``pallas_staged`` forces the stage-at-a-time
-lowering (``fuse="off"``, the NVTabular-style baseline), and a
-``fused_vs_staged`` row reports the speedup so the plan-level-fusion win is
-measurable on the Criteo-shaped workload (dataset I).
+The pallas rows walk the lowering ladder introduced by the relational
+optimizer: ``pallas_grouped`` is the optimized path (``optimize="auto"`` —
+CSE + multi-output DataflowGroups, one ``pallas_call`` per group),
+``pallas_fused`` disables the optimizer but keeps per-output fused
+dataflows (one kernel per PackOutput, the pre-optimizer default), and
+``pallas_staged`` forces the stage-at-a-time lowering (``fuse="off"``, the
+NVTabular-style baseline).  ``grouped_vs_fused`` / ``grouped_vs_staged`` /
+``fused_vs_staged`` rows report the speedups so each rung's win is
+measurable on the Criteo-shaped workloads.
 
 The vocab pipelines (II/III) additionally emit ``fit_*`` rows timing the
 fit phase end to end (projected read through the prefetching read stage +
 chunk build + merge/finalize) and a ``fit_fused_vs_staged`` ratio — the
 fused per-vocab fit kernel vs the stage-at-a-time build.
+
+The paper pipelines' outputs share no stages, so ``grouped_vs_fused`` is
+~1.0 there (grouping only saves per-kernel dispatch); the
+``shared-prefix`` scenario rows measure the optimizer on the workload it
+exists for — N outputs re-deriving the same decode/bound/vocab chains —
+where CSE + one grouped kernel beats N fused kernels ~Nx.
+
+``--json [PATH]`` additionally writes the machine-readable perf trajectory
+(default ``BENCH_6.json`` at the repo root) that the nightly CI job
+regenerates as an artifact; reviewers diff it to catch lowering
+regressions that the CSV stdout stream makes easy to miss.
 """
 
 from __future__ import annotations
+
+import argparse
+import json
+import pathlib
 
 from benchmarks.common import block, emit, timeit
 from repro.core.pipeline import paper_pipeline
@@ -21,14 +40,23 @@ from repro.data import synth
 from repro.data.source import Source
 from repro.session import EtlJob
 
-ROWS = {"I": 100_000, "II": 20_000}  # II is ~6x wider per row
+ROWS = {"I": 100_000, "II": 20_000, "III": 100_000}  # II is ~6x wider
 
-VARIANTS = [  # (row label, backend, fuse mode)
-    ("numpy", "numpy", "auto"),
-    ("jnp", "jnp", "auto"),
-    ("pallas", "pallas", "auto"),
-    ("pallas_staged", "pallas", "off"),
+VARIANTS = [  # (row label, EtlJob compile knobs)
+    ("numpy", dict(backend="numpy")),
+    ("jnp", dict(backend="jnp")),
+    ("pallas_grouped", dict(backend="pallas", fuse="auto", optimize="auto")),
+    ("pallas_fused", dict(backend="pallas", fuse="auto", optimize="off")),
+    ("pallas_staged", dict(backend="pallas", fuse="off", optimize="off")),
 ]
+
+SPEEDUPS = [  # (row label, numerator variant, denominator variant)
+    ("grouped_vs_fused", "pallas_fused", "pallas_grouped"),
+    ("grouped_vs_staged", "pallas_staged", "pallas_grouped"),
+    ("fused_vs_staged", "pallas_staged", "pallas_fused"),
+]
+
+FIT_ROWS = 20_000
 
 
 def bytes_per_row(which: str) -> int:
@@ -36,48 +64,131 @@ def bytes_per_row(which: str) -> int:
     return sum(f.raw_dtype().itemsize * (f.hex_width or 1) for f in schema)
 
 
-def main():
-    for ds in ["I", "II"]:
+def shared_prefix_pipeline(n_outputs: int = 3):
+    """n outputs each re-deriving the SAME dense chain and the SAME
+    sparse decode+bound+vocab chain from fresh source nodes — the
+    duplication the relational optimizer exists to recover."""
+    import numpy as np
+
+    from repro.core import operators as O
+    from repro.core.pipeline import Pipeline, Vocab
+    from repro.core.schema import Schema
+
+    p = Pipeline(Schema.criteo_kaggle())
+    for i in range(n_outputs):
+        d = (p.dense("dense_*") | O.FillMissing(0.0) | O.Clamp(0.0, 50.0)
+             | O.Logarithm())
+        s = (p.sparse("sparse_0") | O.Hex2Int(8) | O.Modulus(8192)
+             | Vocab(8192))
+        p.output(f"out{i}", [d, s], dtype=np.float32)
+    return p
+
+
+def run_shared_prefix(records, rows: int = 100_000) -> None:
+    """The optimizer's headline scenario: CSE folds the duplicated chains
+    and grouping lowers all outputs to ONE kernel (vs n fused kernels
+    re-executing every copy with ``optimize="off"``)."""
+    raw = next(iter(Source.synth("I", rows=rows, batch_size=rows)))
+    times = {}
+    for label, knobs in VARIANTS:
+        job = EtlJob(shared_prefix_pipeline(),
+                     fit_source=Source.synth("I", rows=FIT_ROWS,
+                                             batch_size=FIT_ROWS // 2),
+                     **knobs)
+        job.fit()
+        t = timeit(lambda: block(job.apply(raw)), warmup=1, iters=2)
+        times[label] = t
+        emit(f"fig13_15_16/shared-prefix/{label}", t,
+             f"{rows / t / 1e6:.2f}Mrows_s")
+        records.append(dict(dataset="I", pipeline="shared-prefix",
+                            variant=label, seconds=t,
+                            mrows_per_s=rows / t / 1e6))
+    for label, num, den in SPEEDUPS:
+        ratio = times[num] / times[den]
+        print(f"fig13_15_16/shared-prefix/{label},"
+              f"{ratio:.2f},{ratio:.2f}x_{label}", flush=True)
+        records.append(dict(dataset="I", pipeline="shared-prefix",
+                            variant=label, speedup=ratio))
+
+
+def run(datasets=("I", "II", "III")) -> list[dict]:
+    """Run the matrix, emit CSV rows, and return JSON-ready records."""
+    records = []
+
+    def record(ds, which, label, **kw):
+        records.append(dict(dataset=ds, pipeline=which, variant=label, **kw))
+
+    for ds in datasets:
         rows = ROWS[ds]
         raw = next(iter(Source.synth(ds, rows=rows, batch_size=rows)))
         bpr = bytes_per_row(ds)
         for which in ["I", "II", "III"]:
             times = {}
             fit_times = {}
-            for label, backend, fuse in VARIANTS:
-                if backend == "pallas" and ds == "II":
-                    continue  # interpret-mode cost not informative at width 504
+            for label, knobs in VARIANTS:
                 job = EtlJob(
                     paper_pipeline(which, schema=synth.dataset_schema(ds),
                                    small_vocab=8192, large_vocab=524288,
                                    modulus=65536),
-                    backend=backend, fuse=fuse,
-                    fit_source=Source.synth(ds, rows=20_000,
-                                            batch_size=10_000))
+                    fit_source=Source.synth(ds, rows=FIT_ROWS,
+                                            batch_size=FIT_ROWS // 2),
+                    **knobs)
                 job.fit()
-                if which != "I" and backend == "pallas":
+                if which != "I" and knobs["backend"] == "pallas":
                     # fit phase (vocab pipelines): prefetched read + chunk
                     # build + merge/finalize; the first fit above was warmup
                     tf = timeit(lambda: job.fit(), warmup=0, iters=2)
                     fit_times[label] = tf
                     emit(f"fig13_15_16/D-{ds}+P-{which}/fit_{label}", tf,
-                         f"{20_000 / tf / 1e6:.2f}Mrows_s")
+                         f"{FIT_ROWS / tf / 1e6:.2f}Mrows_s")
+                    record(ds, which, f"fit_{label}", seconds=tf,
+                           mrows_per_s=FIT_ROWS / tf / 1e6)
                 t = timeit(lambda: block(job.apply(raw)), warmup=1, iters=2)
                 times[label] = t
                 emit(f"fig13_15_16/D-{ds}+P-{which}/{label}", t,
                      f"{rows / t / 1e6:.2f}Mrows_s|{rows * bpr / t / 1e6:.0f}MB_s")
-            if "pallas" in times and "pallas_staged" in times:
-                # value column IS the ratio here (not microseconds): the
-                # acceptance criterion "fused >= staged" tracks this number
-                ratio = times["pallas_staged"] / times["pallas"]
-                print(f"fig13_15_16/D-{ds}+P-{which}/fused_vs_staged,"
-                      f"{ratio:.2f},{ratio:.2f}x_staged_over_fused",
-                      flush=True)
-            if "pallas" in fit_times and "pallas_staged" in fit_times:
-                ratio = fit_times["pallas_staged"] / fit_times["pallas"]
+                record(ds, which, label, seconds=t,
+                       mrows_per_s=rows / t / 1e6,
+                       mb_per_s=rows * bpr / t / 1e6)
+            for label, num, den in SPEEDUPS:
+                if num not in times or den not in times:
+                    continue
+                # value column IS the ratio here (not microseconds)
+                ratio = times[num] / times[den]
+                print(f"fig13_15_16/D-{ds}+P-{which}/{label},"
+                      f"{ratio:.2f},{ratio:.2f}x_{label}", flush=True)
+                record(ds, which, label, speedup=ratio)
+            if "pallas_fused" in fit_times and "pallas_staged" in fit_times:
+                ratio = fit_times["pallas_staged"] / fit_times["pallas_fused"]
                 print(f"fig13_15_16/D-{ds}+P-{which}/fit_fused_vs_staged,"
                       f"{ratio:.2f},{ratio:.2f}x_staged_over_fused",
                       flush=True)
+                record(ds, which, "fit_fused_vs_staged", speedup=ratio)
+    run_shared_prefix(records)
+    return records
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", nargs="?", const="", default=None,
+                    metavar="PATH",
+                    help="also write the machine-readable trajectory "
+                         "(default: BENCH_6.json at the repo root)")
+    ap.add_argument("--datasets", default="I,II,III",
+                    help="comma-separated dataset subset (default: I,II,III)")
+    args = ap.parse_args(argv)
+    records = run(tuple(args.datasets.split(",")))
+    if args.json is not None:
+        path = pathlib.Path(args.json) if args.json else (
+            pathlib.Path(__file__).resolve().parent.parent / "BENCH_6.json")
+        path.write_text(json.dumps({
+            "bench": "fig13_15_16",
+            "interpret": True,
+            "rows": ROWS,
+            "fit_rows": FIT_ROWS,
+            "records": records,
+        }, indent=2) + "\n")
+        print(f"wrote {path}", flush=True)
 
 
 if __name__ == "__main__":

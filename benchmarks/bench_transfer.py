@@ -7,7 +7,6 @@ Here: host->device transfer (jax.device_put) and device-resident handoff
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, timeit

@@ -24,7 +24,8 @@ def main() -> None:
     sections = [
         ("table2_operators", bench_operators.main),
         ("fig12_microbench", bench_microbench.main),
-        ("fig13_15_16_pipelines", bench_pipelines.main),
+        # empty argv: don't let its --json/--datasets parser see run.py's
+        ("fig13_15_16_pipelines", lambda: bench_pipelines.main([])),
         ("fig11_transfer", bench_transfer.main),
         ("fig14_overlap", bench_overlap.main),
         ("fig17_concurrent", bench_concurrent.main),

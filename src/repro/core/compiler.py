@@ -6,10 +6,21 @@ Three backends share identical semantics (tests enforce bit-equality):
 - ``jnp``    : XLA-jitted; stages are fused by XLA (the GPU/NVTabular analogue).
 - ``pallas`` : the streaming-dataflow analogue of the paper's FPGA pipeline.
 
-The pallas backend has two lowerings, chosen per ``PackOutput`` from the
-plan's ``DataflowProgram`` nodes:
+Plans are rewritten by ``core/optimizer.optimize_plan`` before lowering
+(``optimize="auto"``, the default): cross-output CSE, dead-stage pushdown,
+and ``DataflowGroup`` formation.  The rewrite applies to every backend, so
+the three-backend bit-equality invariant also pins optimized semantics;
+``optimize="off"`` compiles the planner's plan verbatim.
 
-- **fused** (``fuse="auto"``, the default): every legal output lowers to ONE
+The pallas backend then has three lowerings, chosen per ``PackOutput`` —
+the fallback ladder is grouped → fused → staged:
+
+- **grouped** (``fuse="auto"`` + ``optimize="auto"``): every
+  ``DataflowGroup`` the optimizer proved legal lowers to ONE row-tiled
+  streaming kernel emitting ALL member outputs' packed blocks per tile
+  (``kernels/dataflow.make_group_dataflow``); stages shared across member
+  outputs execute once per tile instead of once per output.
+- **fused** (``fuse="auto"``): every legal ungrouped output lowers to ONE
   row-tiled streaming kernel (``kernels/dataflow.make_output_dataflow``).
   Raw column blocks stream through VMEM; the fused elementwise chains, hex
   decode, vocab rank-lookup and one-hot expansion execute per-tile as stages
@@ -62,12 +73,14 @@ import numpy as np
 
 from repro.core import operators as ops_lib
 from repro.core.dag import NodeType
-from repro.core.planner import (CrossStage, DataflowProgram, ExecutionPlan,
-                                FitProgram, FusedStage, OneHotStage,
-                                PackOutput, VocabLookupStage)
+from repro.core.optimizer import optimize_plan
+from repro.core.planner import (CrossStage, DataflowGroup, DataflowProgram,
+                                ExecutionPlan, FitProgram, FusedStage,
+                                OneHotStage, PackOutput, VocabLookupStage)
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
-from repro.kernels.dataflow import StreamInput, TableInput, TileStep
+from repro.kernels.dataflow import (GroupOutput, StreamInput, TableInput,
+                                    TileStep)
 
 
 def count_pallas_calls(jaxpr) -> int:
@@ -139,16 +152,25 @@ class CompiledPipeline:
 
     def __init__(self, plan: ExecutionPlan, graph, backend: str = "jnp", *,
                  interpret: Optional[bool] = None, name: str = "pipeline",
-                 fuse: str = "auto", semantics=None):
+                 fuse: str = "auto", optimize: str = "auto", semantics=None):
         if backend not in ("numpy", "jnp", "pallas"):
             raise ValueError(f"unknown backend {backend!r}")
         if fuse not in ("auto", "off"):
             raise ValueError(f"unknown fuse mode {fuse!r}")
+        if optimize not in ("auto", "off"):
+            raise ValueError(f"unknown optimize mode {optimize!r}")
+        if optimize == "auto":
+            # plan-level rewrite (CSE + pushdown + grouping); applied for
+            # every backend so numpy/jnp/pallas stay bit-identical over the
+            # SAME rewritten plan — the optimizer equivalence property then
+            # pins optimize="auto" against "off" across backends
+            plan = optimize_plan(plan)
         self.plan = plan
         self.graph = graph
         self.backend = backend
         self.name = name
         self.fuse = fuse
+        self.optimize = optimize
         # the template's PipelineSemantics ride along so the runtime (and
         # EtlJob) see the declared freshness/ordering/batching contract
         self.semantics = semantics
@@ -157,12 +179,22 @@ class CompiledPipeline:
         # codegen; jnp relies on XLA fusion and numpy is the oracle
         self._fused_programs: dict[str, DataflowProgram] = {}
         self._fused_fit_programs: dict[str, FitProgram] = {}
+        # multi-output fused dataflows: groups the optimizer proved legal,
+        # active only where the fused tile codegen is (pallas + fuse=auto)
+        self._active_groups: list[DataflowGroup] = []
+        self._grouped_outputs: dict[str, int] = {}
         if backend == "pallas" and fuse == "auto":
             self._fused_programs = {dp.output: dp for dp in plan.dataflows
                                     if dp.legal}
             self._fused_fit_programs = {fp.vocab_id: fp
                                         for fp in plan.fit_dataflows
                                         if fp.legal}
+            self._active_groups = [g for g in plan.groups
+                                   if all(o in self._fused_programs
+                                          for o in g.outputs)]
+            self._grouped_outputs = {o: gi
+                                     for gi, g in enumerate(self._active_groups)
+                                     for o in g.outputs}
         self.state = PipelineState(
             tables={vf.vocab_id: np.full(vf.capacity, -1, np.int32)
                     for vf in plan.vocab_fits},
@@ -295,11 +327,20 @@ class CompiledPipeline:
         inputs = [StreamInput(b, plan.buffers[b].width, plan.buffers[b].dtype,
                               plan.buffers[b].hex_width)
                   for b in dp.source_buffers]
-        tbl_index = {vid: i for i, vid in enumerate(dp.vocab_ids)}
-        tables: list = [None] * len(dp.vocab_ids)
+        steps, tables = self._dataflow_steps(dp.stage_ids, dp.vocab_ids)
+        terminals = [(b, plan.buffers[b].width) for b in po.buffers]
+        return kops.output_dataflow(inputs, tables, steps, terminals,
+                                    po.dtype, pad_cols_to=po.pad_cols_to,
+                                    interpret=self.interpret)
+
+    def _dataflow_steps(self, stage_ids, vocab_ids):
+        """TileStep program + TableInput list for an apply-side slice
+        (lookup steps resolved against the slice's vocab table order)."""
+        tbl_index = {vid: i for i, vid in enumerate(vocab_ids)}
+        tables: list = [None] * len(vocab_ids)
         steps = []
-        for sid in dp.stage_ids:
-            s = plan.stage_by_id(sid)
+        for sid in stage_ids:
+            s = self.plan.stage_by_id(sid)
             if isinstance(s, VocabLookupStage):
                 idx = tbl_index[s.vocab_id]
                 tables[idx] = TableInput(s.vocab_id, s.capacity)
@@ -307,10 +348,23 @@ class CompiledPipeline:
                                       table=idx))
             else:
                 steps.extend(self._tile_steps([sid]))
-        terminals = [(b, plan.buffers[b].width) for b in po.buffers]
-        return kops.output_dataflow(inputs, tables, steps, terminals,
-                                    po.dtype, pad_cols_to=po.pad_cols_to,
-                                    interpret=self.interpret)
+        return steps, tables
+
+    def _build_group_fn(self, group: DataflowGroup):
+        """Lower one DataflowGroup to its single multi-output kernel."""
+        plan = self.plan
+        inputs = [StreamInput(b, plan.buffers[b].width, plan.buffers[b].dtype,
+                              plan.buffers[b].hex_width)
+                  for b in group.source_buffers]
+        steps, tables = self._dataflow_steps(group.stage_ids, group.vocab_ids)
+        outs = []
+        for name in group.outputs:
+            po = next(p for p in plan.pack if p.name == name)
+            outs.append(GroupOutput(
+                name, tuple((b, plan.buffers[b].width) for b in po.buffers),
+                po.dtype, po.pad_cols_to))
+        return kops.group_dataflow(inputs, tables, steps, outs,
+                                   interpret=self.interpret)
 
     def _tile_steps(self, stage_ids) -> list[TileStep]:
         """Shared TileStep codegen for the fused apply/fit kernel bodies
@@ -358,9 +412,11 @@ class CompiledPipeline:
             if isinstance(s, VocabLookupStage) and s.stage_id in staged_ids)
         dfmap = {dp.output: dp for dp in plan.dataflows}
         fns = self._stage_fns(staged_ids)
+        grouped = self._grouped_outputs
+        group_fns = [self._build_group_fn(g) for g in self._active_groups]
         dataflows = {name: self._build_dataflow_fn(
                          next(po for po in plan.pack if po.name == name), dp)
-                     for name, dp in fused.items()}
+                     for name, dp in fused.items() if name not in grouped}
         packers = {}
         if self.backend == "pallas":
             for po in staged_pos:
@@ -385,9 +441,21 @@ class CompiledPipeline:
                     bufs[s.out_buf] = fns[s.stage_id](
                         bufs[s.in_buf], tables[s.vocab_id],
                         n_uniques[s.vocab_id])
+            # each DataflowGroup issues ONE kernel for all member outputs;
+            # shared stages execute once per tile for the whole group
+            gout = {}
+            for g, gfn in zip(self._active_groups, group_fns):
+                args = ([bufs[b] for b in g.source_buffers]
+                        + [resolved[vid] for vid in g.vocab_ids])
+                for name, packed in zip(g.outputs, gfn(*args)):
+                    gout[name] = packed
             out = {}
             for po in plan.pack:
                 dp = dfmap.get(po.name)
+                if po.name in gout:
+                    packed = gout[po.name]
+                    out[po.name] = packed[:, 0] if po.squeeze else packed
+                    continue
                 if po.name in fused:
                     args = ([bufs[b] for b in dp.source_buffers]
                             + [resolved[vid] for vid in dp.vocab_ids])
@@ -588,21 +656,43 @@ class CompiledPipeline:
     def resource_summary(self) -> dict:
         return self.plan.resource_summary()
 
-    def lowering_report(self) -> dict:
-        """Per-output lowering decision: fused single-kernel vs staged.
+    def optimize_report(self) -> dict:
+        """What the optimizer pass did to the compiled plan (see
+        ``ExecutionPlan.optimize_report``); ``optimized=False`` with zero
+        counts when compiled with ``optimize="off"``."""
+        return self.plan.optimize_report()
 
-        Keys are PackOutput names; ``path`` is "fused" or "staged", and for
-        staged outputs ``reason`` explains the fallback ("" means the
-        backend/fuse mode simply has no tile codegen).
+    def lowering_report(self) -> dict:
+        """Per-output lowering decision: grouped / fused / staged.
+
+        Keys are PackOutput names; ``path`` is "grouped" (member of a
+        multi-output fused dataflow — ``group`` lists the members sharing
+        the kernel), "fused" (own single streaming kernel) or "staged".
+        For staged outputs ``reason`` says what fell back and
+        ``reason_kind`` classifies *why*: "budget" (VMEM working set),
+        "stage-kind" (no tile codegen for a stage), "hbm-table"
+        (HBM-resident vocab), "hex-terminal", or "" when the backend/fuse
+        mode simply has no tile codegen.
         """
         dfmap = {dp.output: dp for dp in self.plan.dataflows}
+        groups = {name: self._active_groups[gi]
+                  for name, gi in self._grouped_outputs.items()}
         rep = {}
         for po in self.plan.pack:
             dp = dfmap.get(po.name)
+            if po.name in groups:
+                path = "grouped"
+            elif po.name in self._fused_programs:
+                path = "fused"
+            else:
+                path = "staged"
             rep[po.name] = {
-                "path": "fused" if po.name in self._fused_programs else "staged",
+                "path": path,
+                "group": list(groups[po.name].outputs)
+                         if po.name in groups else [],
                 "legal": dp.legal if dp else False,
                 "reason": dp.reason if dp else "no dataflow program planned",
+                "reason_kind": dp.reason_kind if dp else "",
                 "n_stages": dp.n_stages if dp else 0,
                 "vocab_ids": list(dp.vocab_ids) if dp else [],
             }
@@ -611,9 +701,10 @@ class CompiledPipeline:
     def fit_lowering_report(self) -> dict:
         """Per-vocab fit lowering decision: fused single-kernel vs staged.
 
-        Keys are vocab ids; ``path`` is "fused" or "staged", and for staged
-        vocabs ``reason`` explains the fallback ("" means the backend/fuse
-        mode simply has no fit tile codegen).
+        Keys are vocab ids; ``path`` is "fused" or "staged"; for staged
+        vocabs ``reason`` says what fell back and ``reason_kind``
+        classifies why (same taxonomy as ``lowering_report``; "" means the
+        backend/fuse mode simply has no fit tile codegen).
         """
         fpmap = {fp.vocab_id: fp for fp in self.plan.fit_dataflows}
         rep = {}
@@ -624,18 +715,64 @@ class CompiledPipeline:
                          else "staged"),
                 "legal": fp.legal if fp else False,
                 "reason": fp.reason if fp else "no fit program planned",
+                "reason_kind": fp.reason_kind if fp else "",
                 "n_stages": fp.n_stages if fp else 0,
                 "placement": vf.placement,
             }
         return rep
 
+    def stage_execution_counts(self, phase: str = "apply") -> dict:
+        """Static per-batch execution count for every plan stage.
+
+        Derived from the lowering decisions (kernel bodies only run at
+        trace time under jit, so dynamic counters cannot observe this):
+        a stage on the staged path executes once per batch regardless of
+        consumer count; a stage in k solo fused kernels re-executes k
+        times (once per kernel body); a stage in a DataflowGroup executes
+        exactly once for the whole group — the acceptance check that
+        shared prefixes run once per batch under the grouped lowering.
+        """
+        if phase not in ("apply", "fit"):
+            raise ValueError(f"unknown phase {phase!r}")
+        plan = self.plan
+        if phase == "fit":
+            counts = {sid: 0 for sid in plan.fit_stage_ids}
+            staged_ids: set = set()
+            for vf in plan.vocab_fits:
+                if vf.vocab_id not in self._fused_fit_programs:
+                    staged_ids.update(plan.fit_slice(vf))
+            for sid in staged_ids:
+                counts[sid] += 1
+            for fp in self._fused_fit_programs.values():
+                for sid in fp.stage_ids:
+                    counts[sid] += 1
+            return counts
+        counts = {s.stage_id: 0 for s in plan.stages}
+        staged_ids = set()
+        for po in plan.pack:
+            if po.name not in self._fused_programs:
+                staged_ids.update(plan.output_slice(po))
+        for sid in staged_ids:
+            counts[sid] += 1
+        for g in self._active_groups:
+            for sid in g.stage_ids:
+                counts[sid] += 1
+        for name, dp in self._fused_programs.items():
+            if name in self._grouped_outputs:
+                continue
+            for sid in dp.stage_ids:
+                counts[sid] += 1
+        return counts
+
     def traced_pallas_call_count(self, raw_batch: dict,
                                  phase: str = "apply") -> int:
         """Number of pallas_call primitives a phase's program traces to.
 
-        ``phase="apply"``: with the fused lowering this equals
-        ``len(plan.pack)`` — one streaming kernel per output (the acceptance
-        invariant); the staged lowering traces one call per stage plus one
+        ``phase="apply"``: the grouped lowering traces one streaming kernel
+        per DataflowGroup plus one per solo fused output — strictly fewer
+        calls than outputs whenever grouping engaged (the acceptance
+        invariant); the ungrouped fused lowering traces exactly one call
+        per output; the staged lowering traces one call per stage plus one
         per packer.  ``phase="fit"``: the fused fit chunk traces one call
         per legally-fused vocab (plus the staged kernels of any fallback
         vocab).

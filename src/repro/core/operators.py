@@ -21,7 +21,7 @@ versioned and frozen before any batch that uses them is emitted).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Sequence
+from typing import Sequence
 
 import jax.numpy as jnp
 import numpy as np

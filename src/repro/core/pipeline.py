@@ -94,10 +94,15 @@ class Pipeline:
 
     def compile(self, backend: str = "jnp", *, interpret: Optional[bool] = None,
                 vmem_budget: int = 4 << 20, lanes: int = 8,
-                vector_width: int = 128, fuse: str = "auto") -> CompiledPipeline:
-        """Lower the DAG. ``fuse="auto"`` (pallas backend) lowers each legal
-        output to a single streaming dataflow kernel; ``fuse="off"`` forces
-        the stage-at-a-time lowering (the measurable baseline)."""
+                vector_width: int = 128, fuse: str = "auto",
+                optimize: str = "auto") -> CompiledPipeline:
+        """Lower the DAG.  ``optimize="auto"`` runs the relational optimizer
+        (cross-output CSE, dead-stage pushdown, multi-output grouping) over
+        the plan first; ``optimize="off"`` compiles the planner's plan
+        verbatim — outputs are bit-identical either way.  ``fuse="auto"``
+        (pallas backend) lowers each ``DataflowGroup`` / legal output to a
+        single streaming dataflow kernel; ``fuse="off"`` forces the
+        stage-at-a-time lowering (the measurable baseline)."""
         if not self._outputs:
             raise ValueError("pipeline has no outputs; call .output(...)")
         planner = Planner(self.graph, vmem_budget=vmem_budget, lanes=lanes,
@@ -105,7 +110,8 @@ class Pipeline:
         plan = planner.plan(self._outputs)
         return CompiledPipeline(plan, self.graph, backend,
                                 interpret=interpret, name=self.name,
-                                fuse=fuse, semantics=self.semantics)
+                                fuse=fuse, optimize=optimize,
+                                semantics=self.semantics)
 
 
 # ---------------------------------------------------------------------------

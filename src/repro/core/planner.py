@@ -37,6 +37,17 @@ from repro.core import operators as ops_lib
 from repro.core.dag import Graph, Node, NodeType
 
 VMEM_TABLE_BUDGET = 4 * 1024 * 1024  # tables at or under this live in VMEM
+DATAFLOW_BLOCK_ROWS = 256  # row-tile granularity of the fused dataflow kernels
+
+# fallback taxonomy for the legality passes (lowering_report.reason_kind):
+#   "hex-terminal"  terminal is a raw hex block the packer cannot emit
+#   "stage-kind"    a sliced stage has no tile codegen
+#   "hbm-table"     a table / accumulator set is HBM-resident
+#   "budget"        the per-tile working set exceeds dataflow_vmem_budget
+FALLBACK_HEX_TERMINAL = "hex-terminal"
+FALLBACK_STAGE_KIND = "stage-kind"
+FALLBACK_HBM_TABLE = "hbm-table"
+FALLBACK_BUDGET = "budget"
 
 
 @dataclasses.dataclass
@@ -135,6 +146,7 @@ class DataflowProgram:
     vocab_ids: list[str]           # tables consumed, in lookup-stage order
     legal: bool = True
     reason: str = ""
+    reason_kind: str = ""          # one of the FALLBACK_* kinds, "" if legal
 
     @property
     def n_stages(self) -> int:
@@ -160,10 +172,34 @@ class FitProgram:
     source_buffers: list[str]      # raw inputs the slice reads
     legal: bool = True
     reason: str = ""
+    reason_kind: str = ""          # one of the FALLBACK_* kinds, "" if legal
 
     @property
     def n_stages(self) -> int:
         return len(self.stage_ids)
+
+
+@dataclasses.dataclass
+class DataflowGroup:
+    """Several PackOutputs lowered together as ONE streaming kernel.
+
+    Emitted by the optimizer (core/optimizer.py): legal per-output
+    ``DataflowProgram``s whose *merged* backward slice still fits one VMEM
+    budget are grouped, so stages shared between outputs (decode, bounding
+    chains) execute exactly once per tile instead of once per output.
+    Groups always hold >= 2 outputs; ungrouped outputs keep their
+    per-output program (the first rung of the fallback ladder:
+    grouped -> per-output fused -> staged).
+    """
+
+    outputs: list[str]             # PackOutput names, pack order
+    stage_ids: list[str]           # merged topo-ordered slice
+    source_buffers: list[str]      # union of raw inputs, plan order
+    vocab_ids: list[str]           # union of tables, lookup-stage order
+
+    @property
+    def n_outputs(self) -> int:
+        return len(self.outputs)
 
 
 @dataclasses.dataclass
@@ -179,6 +215,15 @@ class ExecutionPlan:
     # source buffer -> raw column names it reads (planner column-set export;
     # consumed by repro.session to push projection into any Source)
     source_columns: dict = dataclasses.field(default_factory=dict)
+    # multi-output fused groups (filled by the optimizer pass; empty when
+    # the plan was not optimized or nothing grouped)
+    groups: list[DataflowGroup] = dataclasses.field(default_factory=list)
+    # fused-kernel per-tile working-set bound the legality passes used;
+    # recorded here so the optimizer re-checks merged slices with the same
+    # budget the planner checked per-output slices with
+    dataflow_vmem_budget: int = 0
+    # what the optimizer did to this plan (see ExecutionPlan.optimize_report)
+    opt_info: dict = dataclasses.field(default_factory=dict)
 
     def stage_by_id(self, sid: str):
         for s in self.stages:
@@ -251,6 +296,23 @@ class ExecutionPlan:
     def fit_slice(self, vf: VocabFit) -> list[str]:
         """Topo-ordered stage ids in the backward slice of one vocab fit."""
         return self._slice_to({vf.in_buf})
+
+    def optimize_report(self) -> dict:
+        """What the optimizer pass did to this plan.
+
+        Keys: ``optimized`` (bool), ``cse`` (merged stage/vocab counts),
+        ``pushdown`` (dead stages/sources dropped), ``groups`` (output-name
+        lists, one per ``DataflowGroup``), ``grouping`` (per-output decision
+        string).  An unoptimized plan reports ``optimized=False`` with zero
+        counts.
+        """
+        base = {"optimized": False,
+                "cse": {"merged_sources": 0, "merged_stages": 0,
+                        "merged_vocabs": 0},
+                "pushdown": {"dead_stages": 0, "dead_sources": 0},
+                "groups": [], "grouping": {}}
+        base.update(self.opt_info)
+        return base
 
     # ---- Table-4 analogue: resource summary -----------------------------
     def resource_summary(self) -> dict:
@@ -392,132 +454,10 @@ class Planner:
                              fit_stage_ids=fit_stage_ids,
                              vocab_fits=vocab_fits, pack=pack,
                              source_buffers=source_buffers,
-                             source_columns=source_columns)
-        plan.dataflows = [self._build_dataflow(plan, po) for po in plan.pack]
-        plan.fit_dataflows = [self._build_fit_program(plan, vf)
-                              for vf in plan.vocab_fits]
+                             source_columns=source_columns,
+                             dataflow_vmem_budget=self.dataflow_vmem_budget)
+        build_plan_programs(plan)
         return plan
-
-    # ---- step 6: plan-level fusion (one streaming program per output) ----
-
-    FUSABLE_STAGES = (FusedStage, CrossStage, OneHotStage, VocabLookupStage)
-    # stateless kinds the fit-side tile codegen knows; a lookup can never
-    # legally precede a fit (tables are unfitted then), so it is excluded
-    FIT_FUSABLE_STAGES = (FusedStage, CrossStage, OneHotStage)
-
-    @staticmethod
-    def _slice_sources(stages, terminals) -> list[str]:
-        """Slice inputs (incl. terminals) that no slice stage produces."""
-        produced = {s.out_buf for s in stages}
-        consumed: list[str] = []
-        for s in stages:
-            for attr in ("in_buf", "in_a", "in_b"):
-                b = getattr(s, attr, None)
-                if b:
-                    consumed.append(b)
-        sources: list[str] = []
-        for b in consumed + list(terminals):
-            if b not in produced and b not in sources:
-                sources.append(b)
-        return sources
-
-    def _build_dataflow(self, plan: ExecutionPlan, po: PackOutput,
-                        *, block_rows: int = 256) -> DataflowProgram:
-        """Backward-slice the stages feeding ``po`` and check legality.
-
-        Legal programs lower to a single row-tiled streaming kernel, so the
-        check is a VMEM feasibility argument: every buffer the slice touches
-        contributes one (block_rows x width) tile, every vocab table is
-        staged whole (it must be VMEM-placed), and the packed output tile
-        rides along.  Anything over budget — or any HBM-resident table, or a
-        stage kind the tile codegen does not know — falls back to the staged
-        path for this output only.
-        """
-        stage_ids = plan.output_slice(po)
-        stages = [plan.stage_by_id(sid) for sid in stage_ids]
-        sources = self._slice_sources(stages, po.buffers)
-        produced = {s.out_buf for s in stages}
-
-        vocab_ids: list[str] = []
-        for s in stages:
-            if isinstance(s, VocabLookupStage) and s.vocab_id not in vocab_ids:
-                vocab_ids.append(s.vocab_id)
-
-        for b in po.buffers:
-            if plan.buffers[b].hex_width:
-                return DataflowProgram(
-                    po.name, stage_ids, sources, vocab_ids, legal=False,
-                    reason=f"terminal {b} is a raw hex block; the packer "
-                           "epilogue writes 2-D lane tiles only")
-        for s in stages:
-            if not isinstance(s, self.FUSABLE_STAGES):
-                return DataflowProgram(po.name, stage_ids, sources, vocab_ids,
-                                       legal=False,
-                                       reason=f"unsupported stage {type(s).__name__}")
-        for s in stages:
-            if isinstance(s, VocabLookupStage) and s.placement != "vmem":
-                return DataflowProgram(
-                    po.name, stage_ids, sources, vocab_ids, legal=False,
-                    reason=f"vocab {s.vocab_id} is {s.placement}-resident; "
-                           "the streaming kernel stages tables in VMEM")
-
-        tile_bytes = 0
-        for b in set(sources) | produced:
-            spec = plan.buffers[b]
-            tile_bytes += block_rows * spec.bytes_per_row
-        table_bytes = sum(4 * s.capacity for s in stages
-                          if isinstance(s, VocabLookupStage))
-        out_w = sum(plan.buffers[b].width for b in po.buffers)
-        padded_w = -(-out_w // po.pad_cols_to) * po.pad_cols_to
-        out_bytes = block_rows * padded_w * po.dtype.itemsize
-        working_set = 2 * (tile_bytes + out_bytes) + table_bytes
-        if working_set > self.dataflow_vmem_budget:
-            return DataflowProgram(
-                po.name, stage_ids, sources, vocab_ids, legal=False,
-                reason=f"per-tile working set {working_set} exceeds "
-                       f"budget {self.dataflow_vmem_budget}")
-        return DataflowProgram(po.name, stage_ids, sources, vocab_ids)
-
-    def _build_fit_program(self, plan: ExecutionPlan, vf: VocabFit,
-                           *, block_rows: int = 256) -> FitProgram:
-        """Backward-slice the stages feeding ``vf`` and check fit legality.
-
-        Legal programs lower decode + bound + first-occurrence/count build to
-        a single row-tiled kernel, so the VMEM argument adds the build-side
-        accumulators: two int32[capacity] tables (chunk first-pos + counts)
-        stay resident across the whole grid.  An HBM-placed vocab therefore
-        falls back (its capacity is exactly what exceeded the table budget),
-        as does any stage kind the fit tile codegen does not know or an
-        over-budget working set — staged per vocab, never per pipeline.
-        """
-        stage_ids = plan.fit_slice(vf)
-        stages = [plan.stage_by_id(sid) for sid in stage_ids]
-        sources = self._slice_sources(stages, [vf.in_buf])
-
-        def illegal(reason: str) -> FitProgram:
-            return FitProgram(vf.vocab_id, vf.in_buf, vf.capacity,
-                              stage_ids, sources, legal=False, reason=reason)
-
-        if vf.placement != "vmem":
-            return illegal(
-                f"vocab {vf.vocab_id} is {vf.placement}-resident; the fused "
-                "fit kernel keeps first-pos/count accumulators in VMEM")
-        for s in stages:
-            if not isinstance(s, self.FIT_FUSABLE_STAGES):
-                return illegal(f"unsupported fit stage {type(s).__name__}")
-
-        produced = {s.out_buf for s in stages}
-        tile_bytes = 0
-        for b in set(sources) | produced:
-            spec = plan.buffers[b]
-            tile_bytes += block_rows * spec.bytes_per_row
-        accum_bytes = 2 * 4 * vf.capacity  # first-pos + counts, int32 each
-        working_set = 2 * tile_bytes + accum_bytes
-        if working_set > self.dataflow_vmem_budget:
-            return illegal(f"per-tile working set {working_set} exceeds "
-                           f"budget {self.dataflow_vmem_budget}")
-        return FitProgram(vf.vocab_id, vf.in_buf, vf.capacity,
-                          stage_ids, sources)
 
     @staticmethod
     def _fit_closure(stages, vocab_fits) -> list[str]:
@@ -533,3 +473,156 @@ class Planner:
                     if b:
                         needed.add(b)
         return list(reversed(fit_ids))
+
+
+# ---- step 6: plan-level fusion (one streaming program per output) ----------
+#
+# Module-level so the optimizer (core/optimizer.py) re-runs the same legality
+# checks after rewriting the plan — per-output programs and merged groups are
+# judged by identical VMEM arguments against ``plan.dataflow_vmem_budget``.
+
+FUSABLE_STAGES = (FusedStage, CrossStage, OneHotStage, VocabLookupStage)
+# stateless kinds the fit-side tile codegen knows; a lookup can never
+# legally precede a fit (tables are unfitted then), so it is excluded
+FIT_FUSABLE_STAGES = (FusedStage, CrossStage, OneHotStage)
+
+
+def slice_sources(stages, terminals) -> list[str]:
+    """Slice inputs (incl. terminals) that no slice stage produces."""
+    produced = {s.out_buf for s in stages}
+    consumed: list[str] = []
+    for s in stages:
+        for attr in ("in_buf", "in_a", "in_b"):
+            b = getattr(s, attr, None)
+            if b:
+                consumed.append(b)
+    sources: list[str] = []
+    for b in consumed + list(terminals):
+        if b not in produced and b not in sources:
+            sources.append(b)
+    return sources
+
+
+def stream_tile_bytes(plan: ExecutionPlan, stages, sources,
+                      *, block_rows: int = DATAFLOW_BLOCK_ROWS) -> int:
+    """VMEM bytes of one row tile of every buffer a slice touches."""
+    produced = {s.out_buf for s in stages}
+    return sum(block_rows * plan.buffers[b].bytes_per_row
+               for b in set(sources) | produced)
+
+
+def packed_output_bytes(plan: ExecutionPlan, po: PackOutput,
+                        *, block_rows: int = DATAFLOW_BLOCK_ROWS) -> int:
+    """VMEM bytes of one packed output tile (width padded per the layout)."""
+    out_w = sum(plan.buffers[b].width for b in po.buffers)
+    padded_w = -(-out_w // po.pad_cols_to) * po.pad_cols_to
+    return block_rows * padded_w * po.dtype.itemsize
+
+
+def build_dataflow_program(plan: ExecutionPlan, po: PackOutput,
+                           *, block_rows: int = DATAFLOW_BLOCK_ROWS
+                           ) -> DataflowProgram:
+    """Backward-slice the stages feeding ``po`` and check legality.
+
+    Legal programs lower to a single row-tiled streaming kernel, so the
+    check is a VMEM feasibility argument: every buffer the slice touches
+    contributes one (block_rows x width) tile, every vocab table is
+    staged whole (it must be VMEM-placed), and the packed output tile
+    rides along.  Anything over budget — or any HBM-resident table, or a
+    stage kind the tile codegen does not know — falls back to the staged
+    path for this output only, with ``reason_kind`` naming the fallback
+    class (budget vs stage kind vs HBM table vs hex terminal).
+    """
+    stage_ids = plan.output_slice(po)
+    stages = [plan.stage_by_id(sid) for sid in stage_ids]
+    sources = slice_sources(stages, po.buffers)
+
+    vocab_ids: list[str] = []
+    for s in stages:
+        if isinstance(s, VocabLookupStage) and s.vocab_id not in vocab_ids:
+            vocab_ids.append(s.vocab_id)
+
+    def illegal(reason: str, kind: str) -> DataflowProgram:
+        return DataflowProgram(po.name, stage_ids, sources, vocab_ids,
+                               legal=False, reason=reason, reason_kind=kind)
+
+    for b in po.buffers:
+        if plan.buffers[b].hex_width:
+            return illegal(f"terminal {b} is a raw hex block; the packer "
+                           "epilogue writes 2-D lane tiles only",
+                           FALLBACK_HEX_TERMINAL)
+    for s in stages:
+        if not isinstance(s, FUSABLE_STAGES):
+            return illegal(f"unsupported stage {type(s).__name__}",
+                           FALLBACK_STAGE_KIND)
+    for s in stages:
+        if isinstance(s, VocabLookupStage) and s.placement != "vmem":
+            return illegal(f"vocab {s.vocab_id} is {s.placement}-resident; "
+                           "the streaming kernel stages tables in VMEM",
+                           FALLBACK_HBM_TABLE)
+
+    tile_bytes = stream_tile_bytes(plan, stages, sources,
+                                   block_rows=block_rows)
+    table_bytes = sum(4 * s.capacity for s in stages
+                      if isinstance(s, VocabLookupStage))
+    out_bytes = packed_output_bytes(plan, po, block_rows=block_rows)
+    working_set = 2 * (tile_bytes + out_bytes) + table_bytes
+    if working_set > plan.dataflow_vmem_budget:
+        return illegal(f"per-tile working set {working_set} exceeds "
+                       f"budget {plan.dataflow_vmem_budget}",
+                       FALLBACK_BUDGET)
+    return DataflowProgram(po.name, stage_ids, sources, vocab_ids)
+
+
+def build_fit_program(plan: ExecutionPlan, vf: VocabFit,
+                      *, block_rows: int = DATAFLOW_BLOCK_ROWS) -> FitProgram:
+    """Backward-slice the stages feeding ``vf`` and check fit legality.
+
+    Legal programs lower decode + bound + first-occurrence/count build to
+    a single row-tiled kernel, so the VMEM argument adds the build-side
+    accumulators: two int32[capacity] tables (chunk first-pos + counts)
+    stay resident across the whole grid.  An HBM-placed vocab therefore
+    falls back (its capacity is exactly what exceeded the table budget),
+    as does any stage kind the fit tile codegen does not know or an
+    over-budget working set — staged per vocab, never per pipeline;
+    ``reason_kind`` names the fallback class either way.
+    """
+    stage_ids = plan.fit_slice(vf)
+    stages = [plan.stage_by_id(sid) for sid in stage_ids]
+    sources = slice_sources(stages, [vf.in_buf])
+
+    def illegal(reason: str, kind: str) -> FitProgram:
+        return FitProgram(vf.vocab_id, vf.in_buf, vf.capacity,
+                          stage_ids, sources, legal=False, reason=reason,
+                          reason_kind=kind)
+
+    if vf.placement != "vmem":
+        return illegal(
+            f"vocab {vf.vocab_id} is {vf.placement}-resident; the fused "
+            "fit kernel keeps first-pos/count accumulators in VMEM",
+            FALLBACK_HBM_TABLE)
+    for s in stages:
+        if not isinstance(s, FIT_FUSABLE_STAGES):
+            return illegal(f"unsupported fit stage {type(s).__name__}",
+                           FALLBACK_STAGE_KIND)
+
+    tile_bytes = stream_tile_bytes(plan, stages, sources,
+                                   block_rows=block_rows)
+    accum_bytes = 2 * 4 * vf.capacity  # first-pos + counts, int32 each
+    working_set = 2 * tile_bytes + accum_bytes
+    if working_set > plan.dataflow_vmem_budget:
+        return illegal(f"per-tile working set {working_set} exceeds "
+                       f"budget {plan.dataflow_vmem_budget}", FALLBACK_BUDGET)
+    return FitProgram(vf.vocab_id, vf.in_buf, vf.capacity,
+                      stage_ids, sources)
+
+
+def build_plan_programs(plan: ExecutionPlan) -> None:
+    """(Re)build the per-output and per-vocab fusion programs in place.
+
+    Called by the planner after step 5 and by the optimizer after every
+    plan rewrite — slices and legality always describe the current stages.
+    """
+    plan.dataflows = [build_dataflow_program(plan, po) for po in plan.pack]
+    plan.fit_dataflows = [build_fit_program(plan, vf)
+                          for vf in plan.vocab_fits]

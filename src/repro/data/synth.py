@@ -85,7 +85,6 @@ def lm_event_batches(seq_len: int, *, rows: int, batch_size: int,
                      seed: int = 0, id_universe: int = 1 << 22
                      ) -> Iterator[dict]:
     """Raw LM event-log batches (unbounded ids; SigridHash bounds them)."""
-    schema = Schema.lm_events(seq_len)
     rng = np.random.default_rng(seed)
     emitted = 0
     while emitted < rows:

@@ -24,6 +24,13 @@ factories, in increasing order of fusion:
     (packing is the kernel's epilogue).  Each byte of the stream crosses
     HBM exactly twice: raw in, packed out.
 
+``make_group_dataflow``
+    The merged backward slice of SEVERAL ``PackOutput``s (a planner
+    ``DataflowGroup``) as ONE row-tiled kernel with one packed output block
+    per member.  The shared ``TileStep`` program runs once per tile; each
+    member's packer epilogue reads its terminals from the same VMEM tile
+    environment — the optimizer's cross-output CSE, realized in-kernel.
+
 ``make_fit_dataflow``
     The fit-phase sibling: the backward slice of one ``VocabFit`` — decode,
     bounding chains, joins — plus the chunk first-occurrence + count build
@@ -193,6 +200,40 @@ class TileStep:
     table: int = -1
 
 
+def _row_tile_sources(inputs, srcs, br: int, rp: int):
+    """Pad each raw source to the row-tile multiple and emit its BlockSpec
+    (hex sources are digit-major 3-d; the digit axis is not tiled)."""
+    rows = srcs[0].shape[1] if inputs[0].hex_width else srcs[0].shape[0]
+    padded_srcs, in_specs = [], []
+    for inp, x in zip(inputs, srcs):
+        if inp.hex_width:
+            padded_srcs.append(jnp.pad(x, ((0, 0), (0, rp - rows), (0, 0))))
+            in_specs.append(pl.BlockSpec((inp.hex_width, br, inp.width),
+                                         lambda r: (0, r, 0)))
+        else:
+            padded_srcs.append(jnp.pad(x, ((0, rp - rows), (0, 0))))
+            in_specs.append(pl.BlockSpec((br, inp.width),
+                                         lambda r: (r, 0)))
+    return padded_srcs, in_specs
+
+
+def _run_tile_steps(env: dict, steps, tbl_refs):
+    """Execute the TileStep program over VMEM-resident tiles in ``env``."""
+    for st in steps:
+        if st.kind == "map":
+            env[st.out] = st.fn(env[st.args[0]])
+        elif st.kind == "join":
+            env[st.out] = st.fn(env[st.args[0]], env[st.args[1]])
+        elif st.kind == "lookup":
+            tbl = tbl_refs[st.table][...]  # (1, capacity), OOV-resolved
+            x = env[st.args[0]]
+            safe = jnp.clip(x, 0, tbl.shape[-1] - 1)
+            env[st.out] = jnp.take(tbl[0], safe.reshape(-1),
+                                   axis=0).reshape(x.shape)
+        else:
+            raise NotImplementedError(st.kind)
+
+
 def make_output_dataflow(inputs: Sequence[StreamInput],
                          tables: Sequence[TableInput],
                          steps: Sequence[TileStep],
@@ -217,19 +258,7 @@ def make_output_dataflow(inputs: Sequence[StreamInput],
     def kernel(*refs):
         src_refs, tbl_refs, o_ref = refs[:n_src], refs[n_src:-1], refs[-1]
         env = {inp.name: r[...] for inp, r in zip(inputs, src_refs)}
-        for st in steps:
-            if st.kind == "map":
-                env[st.out] = st.fn(env[st.args[0]])
-            elif st.kind == "join":
-                env[st.out] = st.fn(env[st.args[0]], env[st.args[1]])
-            elif st.kind == "lookup":
-                tbl = tbl_refs[st.table][...]  # (1, capacity), OOV-resolved
-                x = env[st.args[0]]
-                safe = jnp.clip(x, 0, tbl.shape[-1] - 1)
-                env[st.out] = jnp.take(tbl[0], safe.reshape(-1),
-                                       axis=0).reshape(x.shape)
-            else:
-                raise NotImplementedError(st.kind)
+        _run_tile_steps(env, steps, tbl_refs)
         o_ref[...] = jnp.zeros_like(o_ref)
         for (name, w), off in zip(terminals, offsets):
             o_ref[:, off:off + w] = env[name].astype(o_ref.dtype)
@@ -240,16 +269,7 @@ def make_output_dataflow(inputs: Sequence[StreamInput],
         rows = srcs[0].shape[1] if inputs[0].hex_width else srcs[0].shape[0]
         br = min(block_rows, _round_up(rows, 8))
         rp = _round_up(rows, br)
-        padded_srcs, in_specs = [], []
-        for inp, x in zip(inputs, srcs):
-            if inp.hex_width:
-                padded_srcs.append(jnp.pad(x, ((0, 0), (0, rp - rows), (0, 0))))
-                in_specs.append(pl.BlockSpec((inp.hex_width, br, inp.width),
-                                             lambda r: (0, r, 0)))
-            else:
-                padded_srcs.append(jnp.pad(x, ((0, rp - rows), (0, 0))))
-                in_specs.append(pl.BlockSpec((br, inp.width),
-                                             lambda r: (r, 0)))
+        padded_srcs, in_specs = _row_tile_sources(inputs, srcs, br, rp)
         for t, a in zip(tables, tbls):
             assert a.shape == (1, t.capacity), (a.shape, t.capacity)
             in_specs.append(pl.BlockSpec((1, t.capacity), lambda r: (0, 0)))
@@ -262,6 +282,83 @@ def make_output_dataflow(inputs: Sequence[StreamInput],
             interpret=interpret,
         )(*padded_srcs, *tbls)
         return out[:rows]
+
+    return run
+
+
+# ---------------------------------------------------------------------------
+# The multi-output fused streaming dataflow kernel (DataflowGroup lowering)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GroupOutput:
+    """The packer epilogue of one member of a ``DataflowGroup``."""
+
+    name: str
+    terminals: tuple  # ((buffer_name, width), ...) in pack order
+    out_dtype: np.dtype
+    pad_cols_to: int = 1
+
+
+def make_group_dataflow(inputs: Sequence[StreamInput],
+                        tables: Sequence[TableInput],
+                        steps: Sequence[TileStep],
+                        outputs: Sequence[GroupOutput], *,
+                        block_rows: int = 256, interpret: bool = True):
+    """Build fn(*sources, *tables) -> tuple of packed arrays, one per output.
+
+    The grouped form of ``make_output_dataflow``: the merged backward slice
+    of SEVERAL ``PackOutput``s runs as ONE row-tiled ``pallas_call``.  Per
+    grid step the shared ``TileStep`` program executes exactly once over the
+    union tile environment, then each member output's packer epilogue reads
+    its terminals from that one environment and stores them at static lane
+    offsets of its own packed block — stages shared across outputs are
+    computed once per tile instead of once per output.
+    """
+    inputs = list(inputs)
+    tables = list(tables)
+    steps = list(steps)
+    outputs = list(outputs)
+    n_src = len(inputs)
+    n_out = len(outputs)
+    paddeds, offsets_per_out = [], []
+    for g in outputs:
+        widths = [int(w) for _, w in g.terminals]
+        paddeds.append(_round_up(max(sum(widths), 1), max(g.pad_cols_to, 1)))
+        offsets_per_out.append(np.cumsum([0] + widths).tolist())
+
+    def kernel(*refs):
+        src_refs = refs[:n_src]
+        tbl_refs = refs[n_src:-n_out]
+        out_refs = refs[-n_out:]
+        env = {inp.name: r[...] for inp, r in zip(inputs, src_refs)}
+        _run_tile_steps(env, steps, tbl_refs)
+        for g, o_ref, offs in zip(outputs, out_refs, offsets_per_out):
+            o_ref[...] = jnp.zeros_like(o_ref)
+            for (name, w), off in zip(g.terminals, offs):
+                o_ref[:, off:off + w] = env[name].astype(o_ref.dtype)
+
+    def run(*arrays):
+        assert len(arrays) == n_src + len(tables), (len(arrays), n_src)
+        srcs, tbls = arrays[:n_src], arrays[n_src:]
+        rows = srcs[0].shape[1] if inputs[0].hex_width else srcs[0].shape[0]
+        br = min(block_rows, _round_up(rows, 8))
+        rp = _round_up(rows, br)
+        padded_srcs, in_specs = _row_tile_sources(inputs, srcs, br, rp)
+        for t, a in zip(tables, tbls):
+            assert a.shape == (1, t.capacity), (a.shape, t.capacity)
+            in_specs.append(pl.BlockSpec((1, t.capacity), lambda r: (0, 0)))
+        outs = pl.pallas_call(
+            kernel,
+            grid=(rp // br,),
+            in_specs=in_specs,
+            out_specs=[pl.BlockSpec((br, p), lambda r: (r, 0))
+                       for p in paddeds],
+            out_shape=[jax.ShapeDtypeStruct((rp, p), g.out_dtype)
+                       for g, p in zip(outputs, paddeds)],
+            interpret=interpret,
+        )(*padded_srcs, *tbls)
+        return tuple(o[:rows] for o in outs)
 
     return run
 
@@ -336,16 +433,7 @@ def make_fit_dataflow(inputs: Sequence[StreamInput],
         rows = srcs[0].shape[1] if inputs[0].hex_width else srcs[0].shape[0]
         br = min(block_rows, _round_up(rows, 8))
         rp = _round_up(rows, br)
-        padded_srcs, in_specs = [], []
-        for inp, x in zip(inputs, srcs):
-            if inp.hex_width:
-                padded_srcs.append(jnp.pad(x, ((0, 0), (0, rp - rows), (0, 0))))
-                in_specs.append(pl.BlockSpec((inp.hex_width, br, inp.width),
-                                             lambda r: (0, r, 0)))
-            else:
-                padded_srcs.append(jnp.pad(x, ((0, rp - rows), (0, 0))))
-                in_specs.append(pl.BlockSpec((br, inp.width),
-                                             lambda r: (r, 0)))
+        padded_srcs, in_specs = _row_tile_sources(inputs, srcs, br, rp)
         fp, cnt = pl.pallas_call(
             functools.partial(kernel, n_rows=rows),
             grid=(rp // br,),

@@ -9,7 +9,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import dataflow as _dataflow
 from repro.kernels import embedding_bag as _bag
@@ -37,6 +36,17 @@ def output_dataflow(inputs, tables, steps, terminals, out_dtype, *,
     return jax.jit(_dataflow.make_output_dataflow(
         inputs, tables, steps, terminals, out_dtype,
         pad_cols_to=pad_cols_to, block_rows=block_rows, interpret=interpret))
+
+
+def group_dataflow(inputs, tables, steps, outputs, *,
+                   block_rows=256, interpret=None):
+    """A DataflowGroup's merged streaming program — several PackOutputs'
+    packed blocks from a single Pallas kernel."""
+    if interpret is None:
+        interpret = default_interpret()
+    return jax.jit(_dataflow.make_group_dataflow(
+        inputs, tables, steps, outputs,
+        block_rows=block_rows, interpret=interpret))
 
 
 def fit_dataflow(inputs, steps, value_buf, capacity, *,

@@ -6,9 +6,7 @@ allclose between each kernel (interpret=True on CPU) and these references.
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 # ---------------------------------------------------------------------------

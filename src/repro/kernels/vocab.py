@@ -23,7 +23,6 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 
 ABSENT32 = 2 ** 31 - 1  # python int: safe to close over inside kernel bodies

@@ -23,7 +23,7 @@ from repro.configs.base import ALL_SHAPES, ModelConfig, ShapeCfg, TrainConfig
 from repro.configs.registry import ARCH_IDS, canonical, get_config
 from repro.distributed import sharding as shd
 from repro.launch.presets import train_preset
-from repro.models.api import Model, build_model, input_specs
+from repro.models.api import build_model, input_specs
 from repro.training.train_loop import TrainState, make_train_step
 
 # long_500k requires sub-quadratic attention (see DESIGN.md

@@ -16,7 +16,6 @@ from __future__ import annotations
 
 import argparse
 import time
-import warnings
 
 import jax
 import numpy as np
@@ -50,14 +49,6 @@ def make_job(cfg, batch, seq, steps, *, backend="jnp", mesh=None,
     return EtlJob(pipe, src, backend=backend, mesh=mesh, credits=2,
                   metrics_file=metrics_file,
                   metrics_labels={"arch": cfg.name})
-
-
-def make_batches(cfg, batch, seq, steps, *, backend="jnp", mesh=None):
-    """Deprecated shim: old signature, forwards to the EtlJob facade."""
-    warnings.warn("make_batches() is deprecated; use make_job() / "
-                  "repro.session.EtlJob", DeprecationWarning, stacklevel=2)
-    return make_job(cfg, batch, seq, steps,
-                    backend=backend, mesh=mesh).executor()
 
 
 def main(argv=None):

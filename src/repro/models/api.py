@@ -4,7 +4,7 @@ points and ShapeDtypeStruct input_specs per shape cell (dry-run contract)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

@@ -80,7 +80,6 @@ def init(key, cfg: DLRMConfig):
 def forward(params, batch, cfg: DLRMConfig):
     dense = batch["dense"].astype(jnp.dtype(cfg.compute_dtype))
     sparse = batch["sparse"][:, :cfg.n_sparse]  # drop packer padding lanes
-    B = dense.shape[0]
 
     bot = _mlp_apply(params["bot_mlp"], dense, final_linear=False)  # (B, d)
 

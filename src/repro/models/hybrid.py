@@ -12,7 +12,6 @@ bounded by the window.
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp

@@ -45,7 +45,6 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
-import warnings
 from typing import Callable, Optional
 
 from repro.core.compiler import CompiledPipeline
@@ -63,7 +62,10 @@ class EtlJob:
     Parameters
     ----------
     pipeline : a ``Pipeline`` template (compiled lazily with ``backend`` /
-        ``fuse`` / ``interpret``) or an already-``CompiledPipeline``.
+        ``fuse`` / ``optimize`` / ``interpret``) or an
+        already-``CompiledPipeline``.  ``optimize="auto"`` (default) runs
+        the relational optimizer before lowering — see
+        ``EtlJob.optimize_report()``.
     source : the apply-phase ``Source`` (anything batch-yielding is coerced
         via ``Source.stream``); may be ``None`` for fit-/apply-only jobs.
     fit_source : Source for ``fit()`` when it differs from ``source``.
@@ -80,6 +82,7 @@ class EtlJob:
 
     def __init__(self, pipeline, source=None, *,
                  backend: str = "jnp", fuse: str = "auto",
+                 optimize: str = "auto",
                  interpret: Optional[bool] = None,
                  fit_source=None,
                  freshness: Optional[FreshnessPolicy] = None,
@@ -100,10 +103,11 @@ class EtlJob:
             # CompiledPipeline, or any raw->packed callable (tests, shims)
             self._compiled = pipeline
         else:
-            raise TypeError(f"pipeline must be a Pipeline or a compiled "
+            raise TypeError("pipeline must be a Pipeline or a compiled "
                             f"apply program, got {type(pipeline).__name__}")
         self._backend = backend
         self._fuse = fuse
+        self._optimize = optimize
         self._interpret = interpret
         self._source = as_source(source) if source is not None else None
         self._fit_source = (as_source(fit_source)
@@ -133,7 +137,7 @@ class EtlJob:
         if self._compiled is None:
             self._compiled = self._template.compile(
                 backend=self._backend, interpret=self._interpret,
-                fuse=self._fuse)
+                fuse=self._fuse, optimize=self._optimize)
         return self._compiled
 
     @property
@@ -296,18 +300,14 @@ class EtlJob:
     def fit_lowering_report(self) -> dict:
         return self.compiled.fit_lowering_report()
 
+    def optimize_report(self) -> dict:
+        """What the relational optimizer did to the compiled plan (CSE /
+        pushdown counts, DataflowGroups, per-output grouping decisions)."""
+        return self.compiled.optimize_report()
+
     @property
     def fit_read_stats(self):
         """StageStats of the last ``fit()`` read stage (None before fit or
         with ``prefetch=False``): busy = source reads, wait_out = reader
         ahead of the build, wait_in = build waited on ingest."""
         return self._fit_read_stats
-
-
-def streaming_executor(pipeline, source, **kw) -> StreamingExecutor:
-    """Deprecated shim: old call sites that built a ``StreamingExecutor``
-    directly should construct an ``EtlJob`` and use ``job.batches()``."""
-    warnings.warn("streaming_executor() is deprecated; use "
-                  "repro.session.EtlJob(...).batches()", DeprecationWarning,
-                  stacklevel=2)
-    return EtlJob(pipeline, source, **kw).executor()

@@ -16,7 +16,6 @@ the bias vanishes in expectation (EF-SGD).  Used with shard_map-explicit DP.
 
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

@@ -8,9 +8,6 @@ storage dtype.
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 

@@ -4,7 +4,6 @@ The 8-device tests run in a subprocess so the 1-device default of the rest of
 the suite is untouched (jax locks device count at first init).
 """
 
-import json
 import os
 import subprocess
 import sys

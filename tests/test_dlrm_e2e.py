@@ -6,7 +6,6 @@ runtime, and consumed by the DLRM trainer; loss must decrease.
 """
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -9,7 +9,7 @@ import pytest
 
 from repro.configs.base import ShapeCfg
 from repro.configs.registry import ARCH_IDS, get_config, get_reduced
-from repro.models.api import build_model, cache_specs, input_specs, random_batch
+from repro.models.api import build_model, input_specs, random_batch
 
 SHAPE = ShapeCfg("smoke", seq_len=32, global_batch=4, kind="train")
 

@@ -1,0 +1,260 @@
+"""Relational optimizer: CSE, dead-stage pushdown, multi-output grouping.
+
+The acceptance scenario lives here: a plan with three outputs sharing a
+decode prefix, all fitting one VMEM budget, must lower to FEWER kernels
+than outputs, execute shared prefixes exactly once per batch, and stay
+bit-identical across the grouped / per-output-fused / staged rungs of the
+fallback ladder.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import operators as O
+from repro.core.optimizer import optimize_plan
+from repro.core.pipeline import Pipeline, Vocab, paper_pipeline
+from repro.core.planner import (FusedStage, Planner, VocabLookupStage)
+from repro.core.schema import Schema
+from repro.data import synth
+
+
+def _shared_prefix_pipeline(n_outputs=3, pad_cols_to=1):
+    """n outputs, each rebuilding the SAME dense decode chain and the SAME
+    sparse decode + bound + vocab chain from scratch (fresh source nodes per
+    output — the worst-case duplication the optimizer must recover)."""
+    p = Pipeline(Schema.criteo_kaggle())
+    for i in range(n_outputs):
+        d = (p.dense("dense_*") | O.FillMissing(0.0) | O.Clamp(0.0, 50.0)
+             | O.Logarithm())
+        s = (p.sparse("sparse_0") | O.Hex2Int(8) | O.Modulus(1000)
+             | Vocab(1000))
+        p.output(f"out{i}", [d, s], dtype=np.float32,
+                 pad_cols_to=pad_cols_to)
+    return p
+
+
+def _plan(p, **kw):
+    planner = Planner(p.graph, vmem_budget=kw.pop("vmem_budget", 4 << 20),
+                      lanes=8, vector_width=128)
+    return planner.plan(p._outputs)
+
+
+def _fit_batches():
+    return synth.dataset_batches("I", rows=2000, batch_size=1000, seed=7)
+
+
+@pytest.fixture(scope="module")
+def raw_batch():
+    return next(synth.dataset_batches("I", rows=600, batch_size=600, seed=9))
+
+
+# ---------------- CSE --------------------------------------------------------
+
+
+def test_cse_merges_duplicate_prefixes():
+    plan = _plan(_shared_prefix_pipeline(3))
+    opt = optimize_plan(plan)
+    # 3x(dense chain + sparse chain + lookup) -> 1x each
+    assert len(plan.stages) == 9 and len(opt.stages) == 3
+    assert len(plan.vocab_fits) == 3 and len(opt.vocab_fits) == 1
+    rep = opt.optimize_report()
+    assert rep["optimized"] is True
+    assert rep["cse"]["merged_stages"] == 6  # 2 duplicate copies x 3 stages
+    assert rep["cse"]["merged_vocabs"] == 2
+    # every output's pack terminals now point at the shared buffers
+    bufs = {tuple(po.buffers) for po in opt.pack}
+    assert len(bufs) == 1
+    # the input plan is untouched
+    assert len(plan.stages) == 9 and plan.opt_info == {}
+
+
+def test_cse_keeps_distinct_parameters_apart():
+    """Same shape, different operator parameters -> NOT merged."""
+    p = Pipeline(Schema.criteo_kaggle())
+    d1 = p.dense("dense_*") | O.FillMissing(0.0) | O.Clamp(0.0, 50.0)
+    d2 = p.dense("dense_*") | O.FillMissing(0.0) | O.Clamp(0.0, 99.0)
+    p.output("a", [d1], dtype=np.float32)
+    p.output("b", [d2], dtype=np.float32)
+    opt = optimize_plan(_plan(p))
+    assert opt.optimize_report()["cse"]["merged_stages"] == 0
+    assert len(opt.stages) == 2
+    # sources DO merge (same columns), stages don't
+    assert opt.optimize_report()["cse"]["merged_sources"] == 1
+
+
+def test_cse_dedupes_vocab_fit_pairs():
+    """Identical value stream + capacity + min_count -> one VocabFit; a
+    different min_count keeps its own fit."""
+    p = Pipeline(Schema.criteo_kaggle())
+    for name, mc in (("a", 1), ("b", 1), ("c", 2)):
+        s = (p.sparse("sparse_0") | O.Hex2Int(8) | O.Modulus(512)
+             | Vocab(512, min_count=mc))
+        p.output(name, [s], dtype=np.int32)
+    opt = optimize_plan(_plan(p))
+    assert len(opt.vocab_fits) == 2  # min_count=1 pair merged, mc=2 kept
+    assert opt.optimize_report()["cse"]["merged_vocabs"] == 1
+
+
+# ---------------- pushdown (dead-stage elimination) --------------------------
+
+
+def test_pushdown_drops_orphan_stage():
+    """A stage outside the closure of outputs + fits is dropped before the
+    legality passes see it (plan surgery / CSE can orphan producers)."""
+    plan = _plan(_shared_prefix_pipeline(1))
+    # structurally distinct ops, so CSE cannot fold it onto a live stage
+    dead = dataclasses.replace(
+        next(s for s in plan.stages if isinstance(s, FusedStage)),
+        stage_id="s_dead", out_buf="orphan", ops=[O.Clamp(0.0, 123.0)])
+    surgically = dataclasses.replace(plan, stages=plan.stages + [dead])
+    surgically.buffers = dict(plan.buffers)
+    surgically.buffers["orphan"] = dataclasses.replace(
+        plan.buffers[dead.in_buf], name="orphan")
+    opt = optimize_plan(surgically)
+    assert "s_dead" not in [s.stage_id for s in opt.stages]
+    assert "orphan" not in opt.buffers
+    assert opt.optimize_report()["pushdown"]["dead_stages"] == 1
+    # live stages and programs are unaffected
+    assert all(dp.legal for dp in opt.dataflows)
+
+
+def test_pushdown_recomputes_fit_closure():
+    plan = _plan(_shared_prefix_pipeline(3))
+    opt = optimize_plan(plan)
+    # after CSE the fit closure references only surviving stage ids
+    live = {s.stage_id for s in opt.stages}
+    assert set(opt.fit_stage_ids) <= live
+    assert len(opt.fit_stage_ids) < len(plan.fit_stage_ids)
+
+
+# ---------------- grouping ---------------------------------------------------
+
+
+def test_grouping_respects_budget():
+    """Outputs that fit per-output but not merged stay solo-fused."""
+    # pad each output to 512 f32 lanes: one packed tile is 512 KiB, so any
+    # two outputs merged blow a 2 MiB dataflow budget while each fits alone
+    p = _shared_prefix_pipeline(3, pad_cols_to=512)
+    planner = Planner(p.graph, vmem_budget=1 << 20, lanes=8, vector_width=128)
+    opt = optimize_plan(planner.plan(p._outputs))
+    assert all(dp.legal for dp in opt.dataflows)
+    assert opt.groups == []
+    rep = opt.optimize_report()
+    assert all("per-output fused" in v for v in rep["grouping"].values())
+
+
+def test_grouping_reports_fallback_members():
+    """Illegal outputs are excluded from groups with a classified reason."""
+    p = paper_pipeline("III", large_vocab=2 ** 21)  # HBM table
+    c = p.compile(backend="pallas", interpret=True)
+    rep = c.optimize_report()
+    assert rep["groups"] == [["dense", "label"]]
+    assert "hbm-table" in rep["grouping"]["sparse"]
+
+
+# ---------------- the acceptance scenario ------------------------------------
+
+
+def test_grouped_lowering_acceptance(raw_batch):
+    """≥3 outputs sharing a decode prefix, one VMEM budget: fewer kernels
+    than outputs, shared prefix executes once per batch, and the grouped /
+    per-output-fused / staged paths agree bit-for-bit."""
+    variants = {
+        "grouped": dict(fuse="auto", optimize="auto"),
+        "solo": dict(fuse="auto", optimize="off"),
+        "staged": dict(fuse="off", optimize="auto"),
+    }
+    outs, compiled = {}, {}
+    for key, kw in variants.items():
+        c = _shared_prefix_pipeline(3).compile(backend="pallas",
+                                               interpret=True, **kw)
+        c.fit(_fit_batches())
+        outs[key] = {k: np.asarray(v) for k, v in c(raw_batch).items()}
+        compiled[key] = c
+
+    g = compiled["grouped"]
+    n_out = len(g.plan.pack)
+    assert n_out == 3
+    # grouped lowering engaged: strictly fewer kernels than outputs
+    assert g.traced_pallas_call_count(raw_batch) == 1 < n_out
+    assert {v["path"] for v in g.lowering_report().values()} == {"grouped"}
+    # shared prefix stages execute exactly once per batch under grouping...
+    assert set(g.stage_execution_counts().values()) == {1}
+    # ...whereas the unoptimized plan re-executes each duplicated copy
+    solo = compiled["solo"]
+    assert solo.traced_pallas_call_count(raw_batch) == n_out
+    counts = solo.stage_execution_counts()
+    assert len(counts) == 9 and set(counts.values()) == {1}  # 3 copies x 1
+
+    # bit-identical across the whole fallback ladder
+    for key in ("solo", "staged"):
+        for name in outs["grouped"]:
+            np.testing.assert_array_equal(outs["grouped"][name],
+                                          outs[key][name],
+                                          err_msg=f"{key}/{name}")
+    # and pinned to the numpy oracle under the repo's float convention
+    ref = _shared_prefix_pipeline(3).compile(backend="numpy")
+    ref.fit(_fit_batches())
+    for name, want in ref(raw_batch).items():
+        got = outs["grouped"][name]
+        if np.issubdtype(got.dtype, np.integer):
+            np.testing.assert_array_equal(want, got)
+        else:
+            np.testing.assert_allclose(want, got, rtol=1e-5)
+
+
+def test_grouping_solo_fused_counts_shared_stage_per_kernel(raw_batch):
+    """With CSE on but grouping budget-blocked, the shared stage re-executes
+    once per solo kernel — the counter the acceptance test relies on really
+    distinguishes the lowerings."""
+    p = _shared_prefix_pipeline(3, pad_cols_to=512)
+    c = p.compile(backend="pallas", interpret=True, vmem_budget=1 << 20)
+    assert {v["path"] for v in c.lowering_report().values()} == {"fused"}
+    counts = c.stage_execution_counts()
+    assert len(counts) == 3  # CSE still merged the duplicates
+    assert set(counts.values()) == {3}  # each shared stage runs per kernel
+
+
+# ---------------- fallback reasons (lowering_report taxonomy) ----------------
+
+
+def test_budget_fallback_reason_kind():
+    # vocab-free so the undersized budget can only trip the working-set
+    # check (a vocab would re-place its table to HBM first)
+    p = Pipeline(Schema.criteo_kaggle())
+    p.output("out0", [p.dense("dense_*") | O.FillMissing(0.0)],
+             dtype=np.float32)
+    c = p.compile(backend="pallas", interpret=True, vmem_budget=1 << 10)
+    rep = c.lowering_report()["out0"]
+    assert rep["path"] == "staged" and rep["reason_kind"] == "budget"
+    assert "working set" in rep["reason"] or "budget" in rep["reason"]
+
+
+def test_hbm_fit_fallback_reason_kind():
+    c = paper_pipeline("III", large_vocab=2 ** 21).compile(
+        backend="pallas", interpret=True)
+    (rep,) = c.fit_lowering_report().values()
+    assert rep["path"] == "staged" and rep["reason_kind"] == "hbm-table"
+
+
+def test_optimize_off_reports_unoptimized():
+    c = _shared_prefix_pipeline(2).compile(backend="jnp", optimize="off")
+    rep = c.optimize_report()
+    assert rep["optimized"] is False
+    assert rep["cse"]["merged_stages"] == 0 and rep["groups"] == []
+    # the unoptimized plan still lowers every output legally
+    assert len(c.plan.stages) == 6
+
+
+def test_lookup_not_merged_across_different_vocab_params():
+    p = Pipeline(Schema.criteo_kaggle())
+    for name, cap in (("a", 512), ("b", 1024)):
+        s = (p.sparse("sparse_0") | O.Hex2Int(8) | O.Modulus(512)
+             | Vocab(cap))
+        p.output(name, [s], dtype=np.int32)
+    opt = optimize_plan(_plan(p))
+    lookups = [s for s in opt.stages if isinstance(s, VocabLookupStage)]
+    assert len(lookups) == 2 and len(opt.vocab_fits) == 2
+    assert opt.optimize_report()["cse"]["merged_vocabs"] == 0

@@ -136,6 +136,62 @@ def test_fused_equals_composition(seed):
     np.testing.assert_array_equal(got[:, :5], want)
 
 
+# ------------- optimizer equivalence (random shared-prefix DAGs) ------------
+#
+# Vendored-harness property: random DAGs where every output rebuilds the
+# same prefixes from scratch.  ``optimize="auto"`` must (a) produce
+# bit-identical packed outputs to ``optimize="off"`` and (b) report CSE
+# merge counts that exactly match the number of duplicated prefixes.
+
+_DENSE_CHAINS = [
+    lambda: [O.FillMissing(0.0), O.Clamp(0.0, 50.0)],
+    lambda: [O.FillMissing(0.0), O.Clamp(0.0, 50.0), O.Logarithm()],
+    lambda: [O.FillMissing(-1.0), O.Clamp(0.0, 9.0),
+             O.Bucketize([0.5, 1.5, 3.0])],
+]
+
+
+def _shared_prefix_dag(n_dup: int, chain_i: int):
+    """n_dup outputs, each re-deriving the SAME dense chain and the SAME
+    sparse decode+bound+vocab chain from fresh source nodes."""
+    from repro.core.pipeline import Vocab
+    p = Pipeline(Schema.criteo_kaggle())
+    for i in range(n_dup):
+        d = p.dense("dense_*")
+        for op in _DENSE_CHAINS[chain_i]():
+            d = d | op
+        s = (p.sparse("sparse_0") | O.Hex2Int(8) | O.Modulus(256)
+             | Vocab(256))
+        p.output(f"out{i}", [d, s], dtype=np.float32)
+    return p
+
+
+@pt.given(pt.strategies.integers(2, 4), pt.strategies.integers(0, 2),
+          pt.strategies.integers(0, 99), max_examples=6)
+def test_optimizer_auto_bit_equal_to_off_on_shared_prefix_dags(
+        n_dup, chain_i, seed):
+    raw = next(synth.dataset_batches("I", rows=200, batch_size=200,
+                                     seed=seed))
+    fit = list(synth.dataset_batches("I", rows=200, batch_size=100,
+                                     seed=seed + 1))
+    outs = {}
+    for mode in ("auto", "off"):
+        c = _shared_prefix_dag(n_dup, chain_i).compile(backend="jnp",
+                                                       optimize=mode)
+        c.fit(iter(fit))
+        outs[mode] = {k: np.asarray(v) for k, v in c(raw).items()}
+        if mode == "auto":
+            rep = c.optimize_report()
+            # each duplicated copy is 3 stages (dense chain, sparse chain,
+            # vocab lookup) and one VocabFit; n_dup-1 copies merge away
+            assert rep["cse"]["merged_stages"] == 3 * (n_dup - 1)
+            assert rep["cse"]["merged_vocabs"] == n_dup - 1
+            assert len(c.plan.stages) == 3
+    assert sorted(outs["auto"]) == sorted(outs["off"])
+    for k in outs["auto"]:
+        np.testing.assert_array_equal(outs["auto"][k], outs["off"][k])
+
+
 # ------------- Source round-trips (always on the vendored harness) ----------
 #
 # These use ``proptest`` directly (not the hypothesis fast path) so the

@@ -154,7 +154,7 @@ def test_facade_output_bit_equal_to_direct_path(dataset_dir):
                             batch_size=500).compile(backend="pallas")
     job = EtlJob(paper_pipeline("I", modulus=512, batch_size=500),
                  Source.columnar(dataset_dir), backend="pallas")
-    assert any(r["path"] == "fused"
+    assert any(r["path"] in ("fused", "grouped")
                for r in job.lowering_report().values())
     raw_full = next(columnar.iter_batches(dataset_dir, 500))
     via_direct = direct(raw_full)

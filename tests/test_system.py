@@ -11,7 +11,7 @@ import jax
 import numpy as np
 import pytest
 
-from repro.configs.base import ShapeCfg, TrainConfig
+from repro.configs.base import TrainConfig
 from repro.configs.registry import get_reduced
 from repro.core.pipeline import lm_token_pipeline, paper_pipeline
 from repro.data import synth

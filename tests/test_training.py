@@ -17,9 +17,7 @@ from repro.training import fault
 from repro.training.grad import (ef_init, microbatched_value_and_grad,
                                  quantize_int8, dequantize_int8,
                                  split_microbatches)
-from repro.training.optimizer import (adafactor_init, adamw_init,
-                                      clip_by_global_norm, global_norm,
-                                      opt_update)
+from repro.training.optimizer import clip_by_global_norm, global_norm
 from repro.training.train_loop import (LoopConfig, TrainState, make_train_step,
                                        train_loop)
 
@@ -181,7 +179,6 @@ def test_restart_resumes_from_checkpoint():
     with tempfile.TemporaryDirectory() as d:
         step_fn = jax.jit(make_train_step(MODEL.loss, tcfg), donate_argnums=0)
         state = TrainState.create(MODEL.init(jax.random.key(0)), tcfg)
-        calls = {"n": 0}
 
         def batches(n):
             for _ in range(n):
