@@ -34,7 +34,7 @@ import argparse
 import json
 import pathlib
 
-from benchmarks.common import block, emit, timeit
+from benchmarks.common import block, emit, git_sha, timeit
 from repro.core.pipeline import paper_pipeline
 from repro.data import synth
 from repro.data.source import Source
@@ -179,11 +179,19 @@ def main(argv=None):
     args = ap.parse_args(argv)
     records = run(tuple(args.datasets.split(",")))
     if args.json is not None:
+        from repro.kernels.ops import default_interpret
+        sha, interpret = git_sha(), default_interpret()
+        # every record is self-describing: trajectory diffs stay attributable
+        # even when records are merged across runs/commits
+        for r in records:
+            r["git_sha"] = sha
+            r["interpret"] = interpret
         path = pathlib.Path(args.json) if args.json else (
             pathlib.Path(__file__).resolve().parent.parent / "BENCH_6.json")
         path.write_text(json.dumps({
             "bench": "fig13_15_16",
-            "interpret": True,
+            "git_sha": sha,
+            "interpret": interpret,
             "rows": ROWS,
             "fit_rows": FIT_ROWS,
             "records": records,

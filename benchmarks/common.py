@@ -3,9 +3,25 @@ CSV rows (derived = human-relevant rate or ratio for that row)."""
 
 from __future__ import annotations
 
+import pathlib
+import subprocess
 import time
 
 import numpy as np
+
+
+def git_sha(default: str = "unknown") -> str:
+    """Short git SHA of this repo, stamped into JSON bench records so each
+    trajectory point is attributable to the commit that produced it."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=pathlib.Path(__file__).resolve().parent,
+            capture_output=True, text=True, timeout=10)
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else default
+    except (OSError, subprocess.SubprocessError):
+        return default
 
 
 def timeit(fn, *, warmup: int = 1, iters: int = 3) -> float:

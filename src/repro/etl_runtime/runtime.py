@@ -12,6 +12,11 @@ them in ascending length-key order (LM efficiency mode — similar-length
 batches train together), trading strict arrival order inside the bounded
 window only.  FIFO pipelines skip the stage entirely.
 
+The optional **lookahead** stage (``lookahead=EmbedCacheConfig(...)``)
+appears after place: it windows W in-flight envelopes to plan the trainer's
+embedding-cache updates and annotates each delivered batch with its index
+remap + admit/evict plan (see ``etl_runtime/lookahead.py``).
+
 - **read** pulls raw batches from the source — a first-class
   ``repro.data.source.Source`` (whose ``length_key`` / ``arrival`` specs are
   computed host-side here and ride each batch's envelope) or any iterator.
@@ -98,6 +103,7 @@ class CreditQueue:
     def __init__(self, capacity: int, stop: threading.Event, name: str = ""):
         self.capacity = max(1, capacity)
         self.name = name
+        self.dropped = 0  # lifetime count of entries shed by drop_oldest
         self._dq: collections.deque = collections.deque()
         self._cv = threading.Condition()
         self._stop = stop
@@ -131,6 +137,7 @@ class CreditQueue:
                     # capacity (adaptive credits) actually drains the queue
                     self._dq.popleft()
                     dropped += 1
+                    self.dropped += 1
                     continue
                 # every transition notifies under this lock and stop() wakes
                 # all queues, so an untimed wait cannot miss a wakeup
@@ -183,6 +190,7 @@ class StageStats:
     busy_s: float = 0.0       # time spent doing the stage's own work
     wait_in_s: float = 0.0    # blocked waiting for upstream input
     wait_out_s: float = 0.0   # blocked on downstream credits (backpressure)
+    drop_oldest: int = 0      # batches this stage's put shed (freshness)
 
     def occupancy(self) -> float:
         total = self.busy_s + self.wait_in_s + self.wait_out_s
@@ -191,6 +199,7 @@ class StageStats:
     def as_dict(self) -> dict:
         return {"items": self.items, "busy_s": self.busy_s,
                 "wait_in_s": self.wait_in_s, "wait_out_s": self.wait_out_s,
+                "drop_oldest": self.drop_oldest,
                 "occupancy": self.occupancy()}
 
 
@@ -206,6 +215,9 @@ class RuntimeStats:
     raw_resizes: int = 0           # adaptive resizes applied to the raw queue
     epoch_marks: list = field(default_factory=list)
     stages: dict = field(default_factory=dict)  # name -> StageStats
+    # lookahead embedding-cache accounting (etl_runtime.lookahead.CacheStats)
+    # when the executor runs with a lookahead config; None otherwise
+    cache: Optional[object] = None
     # arrival timestamps (Source.arrival) of delivered batches, in delivery
     # order — the freshness-experiment record of what actually trained;
     # bounded so a long-running online job never grows it without limit
@@ -297,6 +309,7 @@ class _Stage(threading.Thread):
             if r is _STOPPED:
                 return
             self.stats.items += 1
+            self.stats.drop_oldest += r
             if self.on_put:
                 self.on_put(r)
 
@@ -522,6 +535,14 @@ class StreamingExecutor:
         consulted when the Source did not supply a host-side key.
     transform_service : optional acquire/release gate arbitrating transform-
         stage device time across tenants (see ``etl_runtime.multitenant``).
+    lookahead : optional ``etl_runtime.lookahead.EmbedCacheConfig``; adds the
+        lookahead prefetch stage after **place** — a window of W in-flight
+        envelopes drives per-table hot-set planning and each delivered batch
+        carries its embedding-cache plan (``lookahead.PLAN_KEYS``).  Cache
+        accounting lands in ``stats.cache``.  With freshness shedding, the
+        shed point moves to the placed queue (before planning) so a planned
+        cache update is never dropped — the consumer must apply every
+        delivered plan, in order, for the host mirror to stay coherent.
     """
 
     _ADAPT_EVERY = 4          # deliveries per resize decision
@@ -535,7 +556,7 @@ class StreamingExecutor:
                  read_timeout_s: float = 30.0,
                  adaptive_credits: bool = False, max_credits: int = 8,
                  length_key: Callable = default_length_key,
-                 transform_service=None):
+                 transform_service=None, lookahead=None):
         self.pipeline = pipeline
         self.semantics = semantics or getattr(pipeline, "semantics", None)
         self.credits = max(1, credits)
@@ -562,11 +583,15 @@ class StreamingExecutor:
         self._stop = threading.Event()
         self._error: Optional[BaseException] = None
         self.stats = RuntimeStats()
+        self.lookahead = lookahead
         ordering = self.semantics.ordering if self.semantics else None
         reorder = bool(ordering and ordering.kind == "bucket_by_length"
                        and ordering.reorder_window >= 2)
-        names = (("read", "transform", "order", "place", "deliver") if reorder
-                 else ("read", "transform", "place", "deliver"))
+        names = ["read", "transform", "place", "deliver"]
+        if reorder:
+            names.insert(2, "order")
+        if lookahead is not None:
+            names.insert(names.index("deliver"), "lookahead")
         for name in names:
             self.stats.stages[name] = StageStats(name)
 
@@ -574,12 +599,19 @@ class StreamingExecutor:
         self._raw_q = CreditQueue(self.credits, self._stop, "raw")
         self._packed_q = CreditQueue(self.credits, self._stop, "packed")
         self._ready_q = CreditQueue(self.credits, self._stop, "ready")
+        self._placed_q = (CreditQueue(self.credits, self._stop, "placed")
+                          if lookahead is not None else None)
 
         def _on_straggler():
             self.stats.skipped_straggler += 1
 
         def _on_delivered(dropped: int):
             self.stats.produced += 1
+            self.stats.dropped_stale += dropped
+
+        def _on_shed(dropped: int):
+            # place -> placed under lookahead: shedding happens here (before
+            # planning), production is counted at the final ready-queue put
             self.stats.dropped_stale += dropped
 
         def _on_error(exc: BaseException):
@@ -619,6 +651,7 @@ class StreamingExecutor:
                 finally:
                     if granted:
                         self._transform_service.release()
+        place_out_q = self._placed_q if lookahead is not None else self._ready_q
         self._stages = [
             _Stage(self.stats.stages["transform"], _env_fn(transform_fn),
                    self._raw_q, self._packed_q,
@@ -626,10 +659,20 @@ class StreamingExecutor:
                    on_in_timeout=_on_straggler, on_error=_on_error),
             *self._stages,
             _Stage(self.stats.stages["place"], _env_fn(self.place),
-                   place_in_q, self._ready_q,
-                   drop_oldest=fresh, on_put=_on_delivered,
+                   place_in_q, place_out_q,
+                   drop_oldest=fresh,
+                   on_put=_on_shed if lookahead is not None else _on_delivered,
                    on_error=_on_error),
         ]
+        if lookahead is not None:
+            # imported here: lookahead.py reuses this module's queue/stats
+            # machinery, so a module-level import would be circular
+            from repro.etl_runtime.lookahead import CacheStats, LookaheadStage
+            self.stats.cache = CacheStats(row_bytes=lookahead.row_bytes)
+            self._stages.append(LookaheadStage(
+                self.stats.stages["lookahead"], self._placed_q, self._ready_q,
+                lookahead, cache_stats=self.stats.cache,
+                on_put=_on_delivered, on_error=_on_error))
         self._on_error = _on_error
         self._reader = threading.Thread(target=self._read_loop,
                                         name="etl-read", daemon=True)
@@ -687,7 +730,8 @@ class StreamingExecutor:
         # the raw (read→transform) queue resizes with the rest of the
         # budget: a starving trainer deepens ingest prefetch too, and the
         # shrink path reclaims that staging memory symmetrically
-        for q in (self._raw_q, self._packed_q, self._ready_q, self._sorted_q):
+        for q in (self._raw_q, self._packed_q, self._ready_q, self._sorted_q,
+                  self._placed_q):
             if q is not None:
                 q.set_capacity(self.current_credits)
         self.stats.raw_resizes += 1
@@ -753,7 +797,8 @@ class StreamingExecutor:
         # left alone (a generator's close() raises if it is mid-next())
         if isinstance(self._source, Source):
             self._source.close()
-        for q in (self._raw_q, self._packed_q, self._sorted_q, self._ready_q):
+        for q in (self._raw_q, self._packed_q, self._sorted_q, self._placed_q,
+                  self._ready_q):
             if q is not None:
                 q.wake()
 
@@ -771,6 +816,8 @@ class StreamingExecutor:
                   "ready": len(self._ready_q)}
         if self._sorted_q is not None:
             depths["sorted"] = len(self._sorted_q)
+        if self._placed_q is not None:
+            depths["placed"] = len(self._placed_q)
         return depths
 
     def __enter__(self):

@@ -1,15 +1,32 @@
-"""Embedding-bag (sum-pooled sparse embedding lookup) Pallas kernel.
+"""Embedding-bag (sum-pooled sparse embedding lookup) Pallas kernels.
 
 The trainer-side hot spot of DLRM: for each sample, gather ``nnz`` rows of an
 embedding table and sum-pool them.  The ETL engine feeds bounded int32 indices
-(VocabMap output), and this kernel is what consumes them on the training chip.
+(VocabMap output), and these kernels are what consume them on the training
+chip.
 
-TPU adaptation: the table is partitioned across the grid (same "HBM banks"
-pattern as vocab.py).  Each grid step loads one table partition into VMEM and
-accumulates partial pools for in-partition indices; misses contribute zero.
-This turns an irregular HBM gather into P dense VMEM passes — MXU/VPU friendly
-and deterministic, at the cost of a P-fold index scan (P is small: tables are
-partitioned only when they exceed the VMEM budget).
+Two levels (the BagPipe/Hotline popular-rare split, PAPERS.md):
+
+- ``embedding_bag`` — the uncached baseline.  The table is partitioned across
+  the grid (same "HBM banks" pattern as vocab.py): each grid step loads one
+  table partition into VMEM and resolves the in-partition indices.  This
+  turns an irregular HBM gather into P dense VMEM passes — MXU/VPU friendly
+  and deterministic, at the cost of a P-fold index scan (P is small: tables
+  are partitioned only when they exceed the VMEM budget).
+- ``embedding_bag_cached`` — the two-level cached form fed by the lookahead
+  stage (``etl_runtime/lookahead.py``).  Hot indices arrive pre-remapped to
+  slots of a small ``[cache_rows, dim]`` cache tensor that stays VMEM-resident
+  for the whole grid (ONE dense pass, no table traffic); cold indices fall
+  through the same partitioned table pass as the uncached kernel.  When the
+  lookahead plan stages every cold row into the cache for the batch
+  (``cold_idx=None``), the kernel is a single cache pass and never touches
+  the table at all.
+
+Both kernels share one structure so they are **bit-identical** on the same
+logical indices: a gather phase materializes the per-(sample, k) rows tile —
+each entry written by exactly one pass, so no float accumulation order is
+involved — and one shared ``jnp`` sum pools over ``nnz``.  ``-1`` indices are
+sentinels and contribute zero (packer padding / empty bag lanes).
 """
 
 from __future__ import annotations
@@ -25,49 +42,179 @@ def _round_up(x: int, m: int) -> int:
     return -(-x // m) * m
 
 
-def _bag_kernel(idx_ref, tbl_ref, o_ref, *, part_rows: int):
+def _pool(rows, batch: int):
+    """Shared pooling epilogue: slice off batch padding, sum over nnz.
+
+    Both kernels feed identical row tiles through this exact op, which is
+    what makes cached-vs-uncached equality bit-level rather than allclose.
+    """
+    return rows[:batch].sum(axis=1)
+
+
+def _partitioned(table, partitions: int):
+    """Split the vocab across ``partitions``, zero-padding the last partition
+    so arbitrary vocab sizes work (rows >= vocab are unreachable: indices are
+    bounded by the vocab and out-of-range values are masked in-kernel)."""
+    vocab, dim = table.shape
+    p = max(partitions, 1)
+    part = -(-vocab // p)
+    if part * p != vocab:
+        table = jnp.pad(table, ((0, part * p - vocab), (0, 0)))
+    return table, part, p
+
+
+def _pad_batch(idx, block_batch: int):
+    batch, _ = idx.shape
+    bb = min(block_batch, _round_up(batch, 8))
+    bp = _round_up(batch, bb)
+    idx = jnp.pad(idx, ((0, bp - batch), (0, 0)), constant_values=-1)
+    return idx, bb, bp
+
+
+def _gather_kernel(idx_ref, tbl_ref, rows_ref, *, part_rows: int):
+    """One table-partition pass: write rows for in-partition indices."""
     p = pl.program_id(1)
     lo = p * part_rows
 
     @pl.when(p == 0)
     def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
+        rows_ref[...] = jnp.zeros_like(rows_ref)
 
     idx = idx_ref[...]  # (bb, nnz)
     local = idx - lo
-    inb = (local >= 0) & (local < part_rows)
+    inb = (local >= 0) & (local < part_rows) & (idx >= 0)
     safe = jnp.where(inb, local, 0)
     tbl = tbl_ref[...]  # (part_rows, dim)
-    rows = jnp.take(tbl, safe.reshape(-1), axis=0)
-    rows = rows.reshape(idx.shape + (tbl.shape[-1],))
-    rows = jnp.where(inb[..., None], rows, 0)
-    o_ref[...] += rows.sum(axis=1).astype(o_ref.dtype)
+    got = jnp.take(tbl, safe.reshape(-1), axis=0)
+    got = got.reshape(idx.shape + (tbl.shape[-1],))
+    rows_ref[...] = jnp.where(inb[..., None], got, rows_ref[...])
 
 
 def embedding_bag(table, indices, *, partitions: int = 1, block_batch: int = 128,
                   interpret: bool = True):
-    """out[b] = sum_k table[indices[b, k]].
+    """out[b] = sum_k table[indices[b, k]];  indices == -1 contribute zero.
 
-    table: [vocab, dim] float; indices: int32[batch, nnz].
+    table: [vocab, dim] float; indices: int32[batch, nnz].  ``vocab`` need
+    not divide ``partitions`` — the last partition is zero-padded inside the
+    wrapper.
     """
     vocab, dim = table.shape
     batch, nnz = indices.shape
-    if vocab % max(partitions, 1):
-        raise ValueError("vocab must divide evenly into partitions")
-    part = vocab // partitions
-    bb = min(block_batch, _round_up(batch, 8))
-    bp = _round_up(batch, bb)
-    idx = jnp.pad(indices, ((0, bp - batch), (0, 0)), constant_values=-1)
+    table, part, parts = _partitioned(table, partitions)
+    idx, bb, bp = _pad_batch(indices, block_batch)
 
-    out = pl.pallas_call(
-        functools.partial(_bag_kernel, part_rows=part),
-        grid=(bp // bb, partitions),
+    rows = pl.pallas_call(
+        functools.partial(_gather_kernel, part_rows=part),
+        grid=(bp // bb, parts),
         in_specs=[
             pl.BlockSpec((bb, nnz), lambda b, p: (b, 0)),
             pl.BlockSpec((part, dim), lambda b, p: (p, 0)),
         ],
-        out_specs=pl.BlockSpec((bb, dim), lambda b, p: (b, 0)),
-        out_shape=jax.ShapeDtypeStruct((bp, dim), table.dtype),
+        out_specs=pl.BlockSpec((bb, nnz, dim), lambda b, p: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, nnz, dim), table.dtype),
         interpret=interpret,
     )(idx, table)
-    return out[:batch]
+    return _pool(rows, batch)
+
+
+def _cache_gather_kernel(slot_ref, cache_ref, rows_ref, *, cache_rows: int):
+    """Single dense pass over the (VMEM-resident) cache: the hot path."""
+    slot = slot_ref[...]
+    inb = (slot >= 0) & (slot < cache_rows)
+    safe = jnp.where(inb, slot, 0)
+    cache = cache_ref[...]
+    got = jnp.take(cache, safe.reshape(-1), axis=0)
+    got = got.reshape(slot.shape + (cache.shape[-1],))
+    rows_ref[...] = jnp.where(inb[..., None], got, 0)
+
+
+def _two_level_kernel(slot_ref, cold_ref, cache_ref, tbl_ref, rows_ref, *,
+                      part_rows: int, cache_rows: int):
+    """Grid dim 1: step 0 = cache pass, steps 1..P = table partition passes.
+
+    Hot entries (slot >= 0) resolve from the cache and shadow any cold id;
+    cold entries fall through the partitioned pass exactly like the uncached
+    kernel.  Entries with neither contribute zero.
+    """
+    p = pl.program_id(1)
+
+    @pl.when(p == 0)
+    def _cache_pass():
+        slot = slot_ref[...]
+        inb = (slot >= 0) & (slot < cache_rows)
+        safe = jnp.where(inb, slot, 0)
+        cache = cache_ref[...]
+        got = jnp.take(cache, safe.reshape(-1), axis=0)
+        got = got.reshape(slot.shape + (cache.shape[-1],))
+        rows_ref[...] = jnp.where(inb[..., None], got, 0)
+
+    @pl.when(p > 0)
+    def _table_pass():
+        lo = (p - 1) * part_rows
+        cold = cold_ref[...]
+        local = cold - lo
+        # hot entries already resolved from the cache: slot wins over cold
+        inb = ((local >= 0) & (local < part_rows) & (cold >= 0)
+               & (slot_ref[...] < 0))
+        safe = jnp.where(inb, local, 0)
+        tbl = tbl_ref[...]
+        got = jnp.take(tbl, safe.reshape(-1), axis=0)
+        got = got.reshape(cold.shape + (tbl.shape[-1],))
+        rows_ref[...] = jnp.where(inb[..., None], got, rows_ref[...])
+
+
+def embedding_bag_cached(table, cache, slot_idx, cold_idx=None, *,
+                         partitions: int = 1, block_batch: int = 128,
+                         interpret: bool = True):
+    """Two-level cached embedding bag.
+
+    out[b] = sum_k rows[b, k] with rows resolved per entry:
+
+    - ``slot_idx[b, k] >= 0``: ``cache[slot_idx[b, k]]`` — ONE dense VMEM
+      pass over the ``[cache_rows, dim]`` cache, no table traffic.
+    - else ``cold_idx[b, k] >= 0``: ``table[cold_idx[b, k]]`` through the
+      uncached kernel's partitioned pass.
+    - both ``-1``: contributes zero (padding lanes).
+
+    ``cold_idx=None`` asserts the lookahead plan staged every cold row into
+    the cache (the fast path): the call lowers to the single cache pass and
+    the table is never read.  When ``cache`` rows mirror the table rows the
+    plan assigned them (the lookahead stage's invariant), the result is
+    bit-identical to ``embedding_bag(table, original_indices)``.
+    """
+    cache_rows, dim = cache.shape
+    batch, nnz = slot_idx.shape
+    slot, bb, bp = _pad_batch(slot_idx, block_batch)
+
+    if cold_idx is None:
+        rows = pl.pallas_call(
+            functools.partial(_cache_gather_kernel, cache_rows=cache_rows),
+            grid=(bp // bb,),
+            in_specs=[
+                pl.BlockSpec((bb, nnz), lambda b: (b, 0)),
+                pl.BlockSpec((cache_rows, dim), lambda b: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((bb, nnz, dim), lambda b: (b, 0, 0)),
+            out_shape=jax.ShapeDtypeStruct((bp, nnz, dim), cache.dtype),
+            interpret=interpret,
+        )(slot, cache)
+        return _pool(rows, batch)
+
+    table, part, parts = _partitioned(table, partitions)
+    cold, _, _ = _pad_batch(cold_idx, block_batch)
+    rows = pl.pallas_call(
+        functools.partial(_two_level_kernel, part_rows=part,
+                          cache_rows=cache_rows),
+        grid=(bp // bb, parts + 1),
+        in_specs=[
+            pl.BlockSpec((bb, nnz), lambda b, p: (b, 0)),
+            pl.BlockSpec((bb, nnz), lambda b, p: (b, 0)),
+            pl.BlockSpec((cache_rows, dim), lambda b, p: (0, 0)),
+            pl.BlockSpec((part, dim),
+                         lambda b, p: (jnp.maximum(p - 1, 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, nnz, dim), lambda b, p: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, nnz, dim), cache.dtype),
+        interpret=interpret,
+    )(slot, cold, cache, table)
+    return _pool(rows, batch)

@@ -91,3 +91,15 @@ def embedding_bag(table, indices, *, partitions=1, interpret=None):
         interpret = default_interpret()
     return _bag.embedding_bag(table, indices, partitions=partitions,
                               interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("partitions", "interpret"))
+def embedding_bag_cached(table, cache, slot_idx, cold_idx=None, *,
+                         partitions=1, interpret=None):
+    """Two-level cached bag: hot slots from the VMEM cache, cold indices
+    through the partitioned table pass (``cold_idx=None`` = fully staged)."""
+    if interpret is None:
+        interpret = default_interpret()
+    return _bag.embedding_bag_cached(table, cache, slot_idx, cold_idx,
+                                     partitions=partitions,
+                                     interpret=interpret)

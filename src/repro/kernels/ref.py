@@ -134,11 +134,26 @@ def pack_blocks(blocks, out_dtype, pad_cols_to=1):
 def embedding_bag(table, indices, weights=None):
     """Sum-pool embedding rows: out[b] = sum_k w[b,k] * table[idx[b,k]].
 
-    table: [vocab, dim]; indices: int32[batch, nnz]; weights: [batch, nnz] or None.
+    table: [vocab, dim]; indices: int32[batch, nnz]; weights: [batch, nnz] or
+    None.  ``-1`` indices are sentinels (padding lanes) and contribute zero.
     """
-    rows = table[indices]  # [batch, nnz, dim]
+    valid = indices >= 0
+    rows = table[jnp.where(valid, indices, 0)]  # [batch, nnz, dim]
+    rows = jnp.where(valid[..., None], rows, 0)
     if weights is not None:
         rows = rows * weights[..., None].astype(rows.dtype)
+    return rows.sum(axis=1)
+
+
+def embedding_bag_cached(table, cache, slot_idx, cold_idx=None):
+    """Two-level oracle: hot entries (slot >= 0) read ``cache[slot]``, cold
+    entries read ``table[cold]``, double-blank entries contribute zero."""
+    hot = slot_idx >= 0
+    rows = jnp.where(hot[..., None], cache[jnp.where(hot, slot_idx, 0)], 0)
+    if cold_idx is not None:
+        cold_ok = (~hot) & (cold_idx >= 0)
+        rows = jnp.where(cold_ok[..., None],
+                         table[jnp.where(cold_ok, cold_idx, 0)], rows)
     return rows.sum(axis=1)
 
 

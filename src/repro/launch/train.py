@@ -36,19 +36,34 @@ from repro.training.train_loop import (LoopConfig, TrainState, jit_train_step,
 
 
 def make_job(cfg, batch, seq, steps, *, backend="jnp", mesh=None,
-             metrics_file="") -> EtlJob:
+             metrics_file="", embed_cache=None) -> EtlJob:
     """Declarative ingest session: raw event logs -> token batches.
 
     The ``Source`` names the stream; ``EtlJob`` owns compile + executor
     lifecycle.  With a mesh, the executor's place stage double-buffers
     ``device_put`` with the trainer's batch ``NamedSharding``, so delivered
     batches are already laid out for ``train_step``'s ``in_shardings``.
+    ``embed_cache`` (an ``EmbedCacheConfig``) adds the lookahead embedding
+    prefetch stage — recommender pipelines whose batches carry a sparse
+    index matrix; LM pipelines have no such key and must leave it unset.
     """
     pipe = lm_token_pipeline(seq, cfg.vocab_size, batch_size=batch)
     src = Source.lm_events(seq, rows=batch * (steps + 4), batch_size=batch)
     return EtlJob(pipe, src, backend=backend, mesh=mesh, credits=2,
-                  metrics_file=metrics_file,
+                  metrics_file=metrics_file, embed_cache=embed_cache,
                   metrics_labels={"arch": cfg.name})
+
+
+def embed_cache_config(args):
+    """CLI knobs -> EmbedCacheConfig (None when the cache is off)."""
+    if args.embed_cache_rows <= 0:
+        return None
+    from repro.etl_runtime.lookahead import EmbedCacheConfig
+    tables = (tuple(int(t) for t in args.embed_cache_tables.split(","))
+              if args.embed_cache_tables else None)
+    return EmbedCacheConfig(rows=args.embed_cache_rows,
+                            window=args.embed_cache_window,
+                            tables=tables, key=args.embed_cache_key)
 
 
 def main(argv=None):
@@ -69,6 +84,16 @@ def main(argv=None):
     ap.add_argument("--max-restarts", type=int, default=2)
     ap.add_argument("--metrics-file", default="",
                     help="write executor StageStats as Prometheus text here")
+    ap.add_argument("--embed-cache-rows", type=int, default=0,
+                    help="device-resident embedding-cache rows per table "
+                         "(0 = lookahead prefetch off)")
+    ap.add_argument("--embed-cache-window", type=int, default=4,
+                    help="lookahead window W (batches) for hot-set planning")
+    ap.add_argument("--embed-cache-tables", default="",
+                    help="comma-separated feature columns to cache "
+                         "(default: all columns of the index matrix)")
+    ap.add_argument("--embed-cache-key", default="sparse",
+                    help="payload key holding the [batch, tables] indices")
     args = ap.parse_args(argv)
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
@@ -115,7 +140,8 @@ def main(argv=None):
 
             job = make_job(cfg, args.batch, args.seq, args.steps,
                            backend=args.etl_backend, mesh=mesh,
-                           metrics_file=args.metrics_file)
+                           metrics_file=args.metrics_file,
+                           embed_cache=embed_cache_config(args))
             loop_cfg = LoopConfig(total_steps=args.steps,
                                   ckpt_dir=args.ckpt_dir,
                                   ckpt_every=args.ckpt_every,

@@ -83,10 +83,23 @@ def forward(params, batch, cfg: DLRMConfig):
 
     bot = _mlp_apply(params["bot_mlp"], dense, final_linear=False)  # (B, d)
 
-    # per-feature single-hot lookup from stacked tables: (B, F, d)
     tables = shard_hint(params["tables"], (None, "model", None))
-    emb = jax.vmap(lambda tbl, idx: jnp.take(tbl, idx, axis=0),
-                   in_axes=(0, 1), out_axes=1)(tables, sparse)
+    if "emb_cache" in batch:
+        # lookahead-planned path (etl_runtime/lookahead.py): hot rows from
+        # the device-resident cache via the two-level Pallas kernel; the
+        # backward pass scatter-adds into the tables at the ORIGINAL ids,
+        # so gradients match the uncached lookup exactly
+        from repro.etl_runtime.lookahead import cached_embedding_lookup
+        from repro.kernels.ops import default_interpret
+        emb = cached_embedding_lookup(
+            tables, batch["emb_cache"][:cfg.n_sparse],
+            batch["emb_slot"][:, :cfg.n_sparse],
+            batch["emb_cold"][:, :cfg.n_sparse], sparse,
+            interpret=default_interpret())
+    else:
+        # per-feature single-hot lookup from stacked tables: (B, F, d)
+        emb = jax.vmap(lambda tbl, idx: jnp.take(tbl, idx, axis=0),
+                       in_axes=(0, 1), out_axes=1)(tables, sparse)
     emb = emb.astype(bot.dtype)
 
     z = jnp.concatenate([bot[:, None, :], emb], axis=1)  # (B, F+1, d)

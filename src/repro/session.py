@@ -73,6 +73,9 @@ class EtlJob:
     credits, adaptive_credits, max_credits, read_timeout_s, mesh, sharding,
     place, length_key, transform_service : forwarded to the executor
         (see ``StreamingExecutor``).
+    embed_cache : optional ``etl_runtime.lookahead.EmbedCacheConfig``; adds
+        the lookahead prefetch stage to the executor (rows, window,
+        per-table on/off) so delivered batches carry embedding-cache plans.
     rebatch : when True, rebatch the source to the batching policy's
         ``batch_size`` (decouples source shard geometry from the trainer).
     pushdown : when False, skip the automatic column projection.
@@ -91,7 +94,7 @@ class EtlJob:
                  max_credits: int = 8, read_timeout_s: float = 30.0,
                  mesh=None, sharding=None, place=None,
                  length_key: Callable = default_length_key,
-                 transform_service=None,
+                 transform_service=None, embed_cache=None,
                  rebatch: bool = False, pushdown: bool = True,
                  metrics_file: str = "", metrics_labels: Optional[dict] = None,
                  name: Optional[str] = None):
@@ -118,7 +121,8 @@ class EtlJob:
             credits=credits, adaptive_credits=adaptive_credits,
             max_credits=max_credits, read_timeout_s=read_timeout_s,
             mesh=mesh, sharding=sharding, place=place,
-            length_key=length_key, transform_service=transform_service)
+            length_key=length_key, transform_service=transform_service,
+            lookahead=embed_cache)
         self._rebatch = rebatch
         self._pushdown = pushdown
         self.metrics_file = metrics_file

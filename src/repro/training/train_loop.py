@@ -103,16 +103,25 @@ class LoopConfig:
 
 
 def train_loop(state: TrainState, step_fn, batches, loop_cfg: LoopConfig,
-               *, async_ckpt: bool = True, on_metrics=None) -> TrainState:
+               *, async_ckpt: bool = True, on_metrics=None,
+               embed_cache=None, embed_tables=None) -> TrainState:
     """Run to total_steps with periodic async checkpoints + watchdog.
 
     ``batches`` may be a plain iterable or a staged ``StreamingExecutor``;
     an executor is stopped on exit (so breaking at ``total_steps`` tears the
     prefetch stages down promptly) and its stats surface in the metrics.
+
+    ``embed_cache`` threads a ``lookahead.EmbedCache`` alongside the train
+    state: before each step the batch's lookahead plan is applied against
+    the CURRENT embedding tables (``embed_tables(state.params)``, default
+    ``params["tables"]``) so the cached forward reads fresh rows.  Plans
+    must be applied in delivery order — the loop is that order.
     """
     ckpt = ckpt_lib.AsyncCheckpointer() if async_ckpt else None
     wd = fault_lib.Watchdog(loop_cfg.watchdog_s) if loop_cfg.watchdog_s else None
     etl_stats = getattr(batches, "stats", None)
+    if embed_cache is not None and embed_tables is None:
+        embed_tables = lambda params: params["tables"]
     t0 = time.perf_counter()
     train_s = 0.0
     try:
@@ -120,6 +129,8 @@ def train_loop(state: TrainState, step_fn, batches, loop_cfg: LoopConfig,
             step_no = int(state.step)
             if step_no >= loop_cfg.total_steps:
                 break
+            if embed_cache is not None:
+                batch = embed_cache.advance(embed_tables(state.params), batch)
             if wd:
                 wd.arm()
             ts = time.perf_counter()
@@ -138,6 +149,9 @@ def train_loop(state: TrainState, step_fn, batches, loop_cfg: LoopConfig,
                 if etl_stats is not None:
                     m["etl_starved_s"] = etl_stats.consumer_wait_s
                     m["etl_overlapped_s"] = etl_stats.overlapped_etl_s
+                    cache = getattr(etl_stats, "cache", None)
+                    if cache is not None:
+                        m["emb_cache_hit_rate"] = cache.hit_rate()
                 if on_metrics:
                     on_metrics(m)
                 else:

@@ -67,3 +67,77 @@ def test_dlrm_embedding_indices_within_table():
     n_uniq = max(pipe.state.n_unique.values())
     assert sparse.max() <= n_uniq  # OOV == n_unique
     assert sparse.max() < CFG.vocab_size
+
+
+def _cache_cfg(**kw):
+    from repro.etl_runtime.lookahead import EmbedCacheConfig
+    kw.setdefault("rows", 96)
+    kw.setdefault("window", 3)
+    kw.setdefault("tables", tuple(range(CFG.n_sparse)))
+    return EmbedCacheConfig(**kw)
+
+
+def test_dlrm_cached_forward_matches_plain():
+    """With a lookahead plan + cache attached, the DLRM forward routes
+    through the cached kernel and reproduces the plain path bit-for-bit."""
+    from repro.etl_runtime.lookahead import EmbedCache, LookaheadPlanner
+
+    pipe = paper_pipeline("II", small_vocab=2048).compile(backend="jnp")
+    pipe.fit(synth.dataset_batches("I", rows=2000, batch_size=1000))
+    batch = pipe(next(synth.dataset_batches("I", rows=128, batch_size=128,
+                                            seed=4)))
+    params = dlrm.init(jax.random.key(1), CFG)
+    plain = np.asarray(dlrm.forward(params, batch, CFG))
+
+    cfg = _cache_cfg()
+    planner = LookaheadPlanner(cfg, CFG.n_sparse)
+    planner.push(np.asarray(batch["sparse"])[:, :CFG.n_sparse])
+    _, plan = planner.pop_plan()
+    cache = EmbedCache(cfg, CFG.n_sparse, CFG.d_emb)
+    cached_batch = cache.advance(params["tables"],
+                                 {**batch, **plan.as_payload()})
+    assert "emb_cache" in cached_batch
+    got = np.asarray(dlrm.forward(params, cached_batch, CFG))
+    np.testing.assert_array_equal(got, plain)
+
+
+@pytest.mark.slow
+def test_dlrm_cached_training_matches_uncached():
+    """Full wiring: executor lookahead stage -> train_loop(embed_cache=...)
+    -> cached forward/backward.  With refresh=True the cached run's losses
+    match an uncached run on the same stream (exact gradients + fresh rows)."""
+    from repro.etl_runtime.lookahead import EmbedCache
+    from repro.training.train_loop import LoopConfig, train_loop
+
+    pipe = paper_pipeline("II", small_vocab=2048,
+                          batch_size=256).compile(backend="jnp")
+    pipe.fit(synth.dataset_batches("I", rows=3000, batch_size=1000, seed=1))
+    tcfg = TrainConfig(lr=3e-3)
+    step = jax.jit(make_train_step(_loss, tcfg))
+    steps = 6
+
+    def run(cache_cfg):
+        state = TrainState.create(dlrm.init(jax.random.key(0), CFG), tcfg)
+        src = synth.dataset_batches("I", rows=steps * 256, batch_size=256,
+                                    seed=2)
+        ex = StreamingExecutor(pipe, src, lookahead=cache_cfg)
+        losses = []
+
+        def wrapped(state, batch):
+            state, m = step(state, batch)
+            losses.append(float(m["loss"]))
+            return state, m
+
+        cache = (EmbedCache(cache_cfg, CFG.n_sparse, CFG.d_emb)
+                 if cache_cfg else None)
+        train_loop(state, wrapped, ex, LoopConfig(total_steps=steps,
+                                                  log_every=0),
+                   async_ckpt=False, embed_cache=cache)
+        return losses, ex.stats
+
+    plain_losses, _ = run(None)
+    cached_losses, stats = run(_cache_cfg(refresh=True, min_admit_freq=1))
+    assert len(cached_losses) == steps
+    np.testing.assert_allclose(cached_losses, plain_losses, rtol=1e-6)
+    assert stats.cache.hits > 0
+    assert stats.cache.hit_rate() > 0.2

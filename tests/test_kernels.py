@@ -164,6 +164,84 @@ def test_embedding_bag_sweep(vocab, dim, batch, nnz, parts):
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
 
 
+@pytest.mark.parametrize("vocab,parts", [
+    (67, 4),    # vocab does not divide partitions: last partition padded
+    (100, 8),   # 100 // 8 leaves a ragged tail
+    (33, 1)])
+def test_embedding_bag_padded_partition(vocab, parts):
+    """Arbitrary vocab sizes work with partitions > 1 (the wrapper pads the
+    last partition; padded rows are unreachable)."""
+    tbl = RNG.normal(size=(vocab, 12)).astype(np.float32)
+    idx = RNG.integers(0, vocab, size=(50, 4)).astype(np.int32)
+    got = np.asarray(ops.embedding_bag(jnp.asarray(tbl), jnp.asarray(idx),
+                                       partitions=parts, interpret=True))
+    want = np.asarray(ref.embedding_bag(jnp.asarray(tbl), jnp.asarray(idx)))
+    # gather-then-pool structure: identical rows, identical sum order
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("batch,nnz,block_batch", [
+    (33, 5, 8),    # batch not a multiple of block_batch
+    (7, 1, 128),   # nnz=1, tiny batch below the block
+    (129, 3, 128)])  # one full block + a remainder row
+def test_embedding_bag_sentinels_and_ragged_batch(batch, nnz, block_batch):
+    """-1 sentinel indices contribute zero (incl. fully-empty bags) and
+    batch padding never leaks into the output."""
+    from repro.kernels import embedding_bag as bag
+    vocab = 90
+    tbl = RNG.normal(size=(vocab, 16)).astype(np.float32)
+    idx = RNG.integers(0, vocab, size=(batch, nnz)).astype(np.int32)
+    idx[RNG.random(idx.shape) < 0.3] = -1
+    idx[0, :] = -1  # an entirely-empty bag pools to the zero vector
+    got = np.asarray(bag.embedding_bag(jnp.asarray(tbl), jnp.asarray(idx),
+                                       partitions=3, block_batch=block_batch,
+                                       interpret=True))
+    want = np.asarray(ref.embedding_bag(jnp.asarray(tbl), jnp.asarray(idx)))
+    assert got.shape == (batch, 16)
+    np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(got[0], 0.0)
+
+
+@pytest.mark.parametrize("parts", [1, 4])
+@pytest.mark.parametrize("staged", [False, True])
+def test_embedding_bag_cached_bit_equal_to_uncached(parts, staged):
+    """Two-level cached kernel == uncached kernel, bit for bit, when the
+    cache rows mirror the table rows the remap assigned (the lookahead
+    stage's invariant).  ``staged`` covers the single-pass fast path."""
+    vocab, dim, batch, nnz, cache_rows = 150, 8, 40, 6, 32
+    tbl = RNG.normal(size=(vocab, dim)).astype(np.float32)
+    idx = RNG.integers(0, vocab, size=(batch, nnz)).astype(np.int32)
+    idx[RNG.random(idx.shape) < 0.1] = -1
+
+    if staged:
+        # stage EVERY distinct row into an ext cache: cold_idx=None
+        uniq = np.unique(idx[idx >= 0])
+        cache = tbl[uniq]
+        slot_of = np.full(vocab, -1, np.int64)
+        slot_of[uniq] = np.arange(len(uniq))
+        slot = np.where(idx >= 0, slot_of[idx.clip(min=0)], -1).astype(np.int32)
+        cold = None
+    else:
+        hot = RNG.choice(vocab, size=cache_rows, replace=False)
+        cache = tbl[hot]
+        slot_of = np.full(vocab, -1, np.int64)
+        slot_of[hot] = np.arange(cache_rows)
+        slot = np.where(idx >= 0, slot_of[idx.clip(min=0)], -1).astype(np.int32)
+        cold = np.where(slot < 0, idx, -1).astype(np.int32)
+
+    got = np.asarray(ops.embedding_bag_cached(
+        jnp.asarray(tbl), jnp.asarray(cache), jnp.asarray(slot),
+        None if cold is None else jnp.asarray(cold),
+        partitions=parts, interpret=True))
+    want = np.asarray(ops.embedding_bag(jnp.asarray(tbl), jnp.asarray(idx),
+                                        partitions=parts, interpret=True))
+    np.testing.assert_array_equal(got, want)
+    want_ref = np.asarray(ref.embedding_bag_cached(
+        jnp.asarray(tbl), jnp.asarray(cache), jnp.asarray(slot),
+        None if cold is None else jnp.asarray(cold)))
+    np.testing.assert_array_equal(got, want_ref)
+
+
 def test_flash_attention_matches_dense():
     from repro.models import layers as L
     B, S, H, D = 2, 128, 2, 16

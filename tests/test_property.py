@@ -116,6 +116,38 @@ def test_hex_encode_decode_roundtrip(v):
     assert out == v
 
 
+@given(st.integers(0, 2 ** 31 - 1))
+def test_embedding_bag_cached_bit_equal_on_skewed_inputs(seed):
+    """ISSUE 7 acceptance property: the two-level cached kernel is
+    bit-identical to the uncached kernel on random Zipf-skewed inputs, for
+    any consistent hot-set remap (cache rows mirror their table rows)."""
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(seed)
+    vocab = int(rng.integers(20, 200))
+    dim = int(rng.integers(2, 24))
+    batch = int(rng.integers(1, 70))
+    nnz = int(rng.integers(1, 7))
+    parts = int(rng.integers(1, 5))
+    cache_rows = int(rng.integers(1, vocab + 1))
+    tbl = rng.normal(size=(vocab, dim)).astype(np.float32)
+    idx = (rng.zipf(1.2, size=(batch, nnz)).clip(max=vocab) - 1).astype(
+        np.int32)
+    idx[rng.random(idx.shape) < 0.1] = -1  # padding lanes
+    hot = rng.choice(vocab, size=cache_rows, replace=False)
+    slot_of = np.full(vocab, -1, np.int64)
+    slot_of[hot] = np.arange(cache_rows)
+    slot = np.where(idx >= 0, slot_of[idx.clip(min=0)], -1).astype(np.int32)
+    cold = np.where(slot < 0, idx, -1).astype(np.int32)
+    got = np.asarray(ops.embedding_bag_cached(
+        jnp.asarray(tbl), jnp.asarray(tbl[hot]), jnp.asarray(slot),
+        jnp.asarray(cold), partitions=parts, interpret=True))
+    want = np.asarray(ops.embedding_bag(
+        jnp.asarray(tbl), jnp.asarray(idx), partitions=parts,
+        interpret=True))
+    np.testing.assert_array_equal(got, want)
+
+
 @given(st.integers(2, 64))
 def test_fused_equals_composition(seed):
     """Compiled fused stage == composing individual operator oracles."""
