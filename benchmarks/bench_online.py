@@ -1,0 +1,114 @@
+"""Online-training service: sustained throughput and freshness under load.
+
+The measurement for the continuous-training subsystem (``repro/online``):
+a producer replays a synthetic Criteo-like event stream onto the bus at a
+multiple of the trainer's sustainable rate, and the ``OnlineTrainer``
+consumes it while refitting the vocabulary incrementally every
+``refit_every`` steps and shedding globally-oldest events to hold a
+freshness bound.
+
+Each cell sweeps producer pressure (rate multiplier x shed bound) over a
+fixed wall-clock window and reports:
+
+- ``steps_per_s``   : sustained train-step rate under that pressure.
+- ``swaps``         : incremental vocab refits applied (each an atomic
+  ``PipelineState`` swap with a version bump).
+- ``p95_ms``        : delivered event-age p95 vs the configured bound —
+  the freshness acceptance surface (``p95 <= bound`` when shedding).
+- ``shed``          : events dropped oldest-first by the global shedder.
+
+``--json [PATH]`` writes the machine-readable trajectory (default
+``BENCH_8.json`` at the repo root), every record stamped with the git
+SHA; ``--smoke`` runs the single bursty acceptance cell (nightly CI).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import threading
+import time
+
+from benchmarks.common import emit, git_sha
+from repro.launch.online import build_parser, build_service
+
+# (rate_mult, shed_bound_s) cells: calm, saturated, bursty-with-shedding
+CELLS = [(0.5, 0.0), (1.5, 0.0), (2.0, 0.5), (3.0, 0.25)]
+SMOKE = [(2.0, 0.5)]
+
+
+def run_cell(mult: float, bound_s: float, duration: float,
+             backend: str) -> dict:
+    argv = ["--duration", str(duration), "--batch", "128",
+            "--vocab", "2048", "--d-emb", "16", "--rate", "30",
+            "--rate-mult", str(mult), "--refit-every", "10",
+            "--shed-max-staleness", str(bound_s), "--log-every", "0",
+            "--etl-backend", backend]
+    args = build_parser().parse_args(argv)
+    trainer, bus, producer = build_service(args)
+    t = threading.Thread(target=producer, name="bench-producer")
+    t0 = time.perf_counter()
+    t.start()
+    trainer.run(deadline_s=duration + 5.0)
+    t.join()
+    wall = time.perf_counter() - t0
+    pct = trainer.staleness_percentiles()
+    rec = {
+        "rate_mult": mult,
+        "shed_bound_s": bound_s,
+        "wall_s": round(wall, 2),
+        "steps": trainer.stats.steps,
+        "steps_per_s": round(trainer.stats.steps / max(wall, 1e-9), 2),
+        "swaps": trainer.stats.swaps,
+        "refit_batches": trainer.stats.refit_batches,
+        "p50_ms": round(pct["p50"] * 1e3, 1),
+        "p95_ms": round(pct["p95"] * 1e3, 1),
+        "p99_ms": round(pct["p99"] * 1e3, 1),
+        "shed": trainer.shed_stats().dropped,
+        "bus": bus.counts(),
+    }
+    emit(f"online[x{mult},bound={bound_s}]", wall,
+         f"{rec['steps_per_s']}steps/s swaps={rec['swaps']} "
+         f"p95={rec['p95_ms']}ms shed={rec['shed']}")
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--duration", type=float, default=10.0,
+                    help="wall-clock per cell (s)")
+    ap.add_argument("--etl-backend", default="numpy",
+                    choices=["numpy", "jnp", "pallas"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="run only the bursty acceptance cell (nightly CI)")
+    ap.add_argument("--json", nargs="?", const="", default=None,
+                    metavar="PATH",
+                    help="write machine-readable results to PATH "
+                         "(default: BENCH_8.json at the repo root)")
+    args = ap.parse_args(argv)
+
+    cells = SMOKE if args.smoke else CELLS
+    records = [run_cell(m, b, args.duration, args.etl_backend)
+               for m, b in cells]
+
+    for r in records:
+        if r["shed_bound_s"] > 0:
+            ok = r["p95_ms"] <= r["shed_bound_s"] * 1e3
+            print(f"# freshness x{r['rate_mult']}: p95 {r['p95_ms']}ms "
+                  f"vs bound {r['shed_bound_s']*1e3:.0f}ms -> "
+                  f"{'OK' if ok else 'OVER'}")
+
+    if args.json is not None:
+        path = pathlib.Path(args.json) if args.json else (
+            pathlib.Path(__file__).resolve().parent.parent / "BENCH_8.json")
+        path.write_text(json.dumps({
+            "bench": "online", "git_sha": git_sha(),
+            "backend": args.etl_backend, "duration_s": args.duration,
+            "records": records}, indent=2))
+        print(f"# wrote {path}")
+    return records
+
+
+if __name__ == "__main__":
+    main()

@@ -264,7 +264,11 @@ class CompiledPipeline:
     # stage interpreters
     # ------------------------------------------------------------------
 
-    def _run_stages_numpy(self, bufs: dict, stage_ids=None) -> dict:
+    def _run_stages_numpy(self, bufs: dict, stage_ids=None,
+                          state: Optional[PipelineState] = None) -> dict:
+        # state is an explicit snapshot so one batch never mixes two
+        # vocabulary versions when an online refit swaps self.state mid-run
+        state = self.state if state is None else state
         for s in self.plan.stages:
             if stage_ids is not None and s.stage_id not in stage_ids:
                 continue
@@ -275,7 +279,7 @@ class CompiledPipeline:
             elif isinstance(s, OneHotStage):
                 bufs[s.out_buf] = s.op.numpy(bufs[s.in_buf])
             elif isinstance(s, VocabLookupStage):
-                tbl = self.state.tables[s.vocab_id]
+                tbl = state.tables[s.vocab_id]
                 vm = ops_lib.VocabMap(s.capacity)
                 bufs[s.out_buf] = vm.numpy_apply(bufs[s.in_buf], tbl)
             else:
@@ -551,6 +555,50 @@ class CompiledPipeline:
             self.state = dataclasses.replace(self.state,
                                              version=self.state.version + 1)
             return self.state
+        tables, n_unique = self._fit_tables(batch_iter)
+        self.state = PipelineState(tables=tables, n_unique=n_unique,
+                                   version=self.state.version + 1)
+        return self.state
+
+    def fit_incremental(self, batch_iter) -> PipelineState:
+        """Online vocabulary refresh over a window of NEW events.
+
+        Unlike ``fit`` (which rebuilds the tables from scratch), this merges
+        the window into the current state **rank-stably**: every value the
+        pipeline already admitted keeps its rank — so embedding rows learned
+        by a live trainer keep their meaning across the swap — and values
+        first seen in the window are appended in first-occurrence order at
+        ranks ``n_unique ..``.  The frequency filter (``min_count``) applies
+        per window.  The swap is a single attribute store of a fresh
+        ``PipelineState`` with a version bump, so concurrent apply calls
+        (which snapshot the state once per batch) are each served by exactly
+        one version, and the per-version resolved/staged table caches refresh
+        automatically.
+        """
+        cur = self.state
+        if not self.plan.vocab_fits:
+            self.state = dataclasses.replace(cur, version=cur.version + 1)
+            return self.state
+        win_tables, _ = self._fit_tables(batch_iter)
+        tables, n_unique = {}, {}
+        for vid, wt in win_tables.items():
+            base = np.asarray(cur.tables[vid])
+            n = int(cur.n_unique[vid])
+            wt = np.asarray(wt)
+            new_vals = np.flatnonzero((wt >= 0) & (base < 0))
+            order = np.argsort(wt[new_vals], kind="stable")
+            merged = base.copy()
+            merged[new_vals[order]] = n + np.arange(len(new_vals),
+                                                    dtype=np.int32)
+            tables[vid] = merged
+            n_unique[vid] = n + int(len(new_vals))
+        self.state = PipelineState(tables=tables, n_unique=n_unique,
+                                   version=cur.version + 1)
+        return self.state
+
+    def _fit_tables(self, batch_iter) -> tuple:
+        """Run the (fused) chunked fit machinery over ``batch_iter`` and
+        return ``(tables, n_unique)`` without touching ``self.state``."""
         if self.backend == "numpy":
             gens = {vf.vocab_id: ops_lib.VocabGen(vf.capacity,
                                                   min_count=vf.min_count)
@@ -588,50 +636,56 @@ class CompiledPipeline:
                       for vid, st in states.items()}
         n_unique = {vid: ops_lib.VocabGen.n_unique(t)
                     for vid, t in tables.items()}
-        self.state = PipelineState(tables=tables, n_unique=n_unique,
-                                   version=self.state.version + 1)
-        return self.state
+        return tables, n_unique
 
-    def _resolved_tables(self) -> dict:
+    def _resolved_tables(self, state: Optional[PipelineState] = None) -> dict:
         """OOV-resolved (1, capacity) tables for the fused kernels' gathers:
         table'[v] = rank if present else n_unique.  Computed once per state
         version — tables only change at fit/swap time, so the apply hot path
         never pays the O(capacity) fold per batch."""
+        state = self.state if state is None else state
         fused_vids = {vid for dp in self._fused_programs.values()
                       for vid in dp.vocab_ids}
         if not fused_vids:
             return {}
         ver, cached = self._resolved_cache
-        if ver == self.state.version:
+        if ver == state.version:
             return cached
         resolved = {}
         for vid in sorted(fused_vids):
-            t = np.asarray(self.state.tables[vid])
-            n = self.state.n_unique[vid]
+            t = np.asarray(state.tables[vid])
+            n = state.n_unique[vid]
             resolved[vid] = jnp.asarray(
                 np.where(t >= 0, t, n).astype(np.int32).reshape(1, -1))
-        self._resolved_cache = (self.state.version, resolved)
+        self._resolved_cache = (state.version, resolved)
         return resolved
 
-    def _staged_table_args(self) -> tuple:
+    def _staged_table_args(self, state: Optional[PipelineState] = None) -> tuple:
         """Device-resident raw tables + n_unique scalars for the staged
         lookups only, uploaded once per state version (fully fused
         vocabularies never ship their raw table to the apply program)."""
+        state = self.state if state is None else state
         ver, cached = self._staged_cache
-        if ver == self.state.version:
+        if ver == state.version:
             return cached
-        tables = {vid: jnp.asarray(self.state.tables[vid])
+        tables = {vid: jnp.asarray(state.tables[vid])
                   for vid in self._staged_vocab_ids}
-        n_uniq = {vid: jnp.asarray(self.state.n_unique[vid], jnp.int32)
+        n_uniq = {vid: jnp.asarray(state.n_unique[vid], jnp.int32)
                   for vid in self._staged_vocab_ids}
-        self._staged_cache = (self.state.version, (tables, n_uniq))
+        self._staged_cache = (state.version, (tables, n_uniq))
         return tables, n_uniq
 
-    def __call__(self, raw_batch: dict) -> dict:
-        """Apply phase: raw columnar batch -> packed training-ready tensors."""
+    def apply_versioned(self, raw_batch: dict) -> tuple:
+        """Apply one batch against a single state snapshot and return
+        ``(packed, version)`` — the snapshot is read exactly once, so a
+        concurrent ``fit_incremental`` swap can never serve one batch a mix
+        of two vocabulary versions, and the caller learns which version
+        transformed the batch (``repro.online`` tags delivered batches
+        with it)."""
+        state = self.state
         if self.backend == "numpy":
             sources = self._gather_sources(raw_batch)
-            bufs = self._run_stages_numpy(dict(sources))
+            bufs = self._run_stages_numpy(dict(sources), state=state)
             out = {}
             for po in self.plan.pack:
                 blocks = [bufs[b] for b in po.buffers]
@@ -643,10 +697,15 @@ class CompiledPipeline:
                 if padded != cat.shape[1]:
                     cat = np.pad(cat, ((0, 0), (0, padded - cat.shape[1])))
                 out[po.name] = cat[:, 0] if po.squeeze else cat
-            return out
-        tables, n_uniq = self._staged_table_args()
+            return out, state.version
+        tables, n_uniq = self._staged_table_args(state)
         cols = {k: jnp.asarray(v) for k, v in self._raw_columns(raw_batch).items()}
-        return self._apply_jit(tables, n_uniq, self._resolved_tables(), cols)
+        return (self._apply_jit(tables, n_uniq, self._resolved_tables(state),
+                                cols), state.version)
+
+    def __call__(self, raw_batch: dict) -> dict:
+        """Apply phase: raw columnar batch -> packed training-ready tensors."""
+        return self.apply_versioned(raw_batch)[0]
 
     def referenced_columns(self) -> list:
         """Raw columns the apply program reads (projection-pushdown set)."""

@@ -70,16 +70,28 @@ class SourceSpec:
         return lambda i: seq[i] if i < len(seq) else None
 
 
+class _WAKE:
+    """Sentinel a closing Source injects into its feed so a reader blocked
+    on an empty queue wakes immediately instead of sleeping out its whole
+    poll interval (shutdown-latency fix).  Readers discard it and re-check
+    their close token, so a stale wake from a previous iteration's close is
+    harmless."""
+
+
 class _CloseChannel:
     """Close signal scoped to the *active* iteration of a blocking reader.
 
     ``token()`` hands each new iteration a fresh event, so closing one
     executor run (``Source.close``) never poisons a later re-iteration of
-    the same Source (one active iteration at a time).
+    the same Source (one active iteration at a time).  ``wake`` (optional)
+    runs after the event is set to unblock a reader parked inside a blocking
+    get — e.g. pushing ``_WAKE`` into a ``queue.Queue`` feed, or notifying a
+    bus subscription's condition.
     """
 
-    def __init__(self):
+    def __init__(self, wake: Optional[Callable[[], None]] = None):
         self._current: Optional[threading.Event] = None
+        self._wake = wake
 
     def token(self) -> threading.Event:
         self._current = threading.Event()
@@ -88,6 +100,8 @@ class _CloseChannel:
     def set(self) -> None:
         if self._current is not None:
             self._current.set()
+        if self._wake is not None:
+            self._wake()
 
 
 def _first_len(batch: dict) -> int:
@@ -277,10 +291,21 @@ class Source:
 
         Queue readers poll with ``poll_s`` and end when ``close()`` is
         called (the executor does so on stop), so a producer that dies
-        without sending the sentinel cannot leak the read thread.
+        without sending the sentinel cannot leak the read thread.  Close is
+        *immediate*: it also injects a wake sentinel into the queue, so a
+        reader parked on an empty feed never sleeps out the rest of its
+        poll interval before noticing.
         """
         if isinstance(obj, queue_lib.Queue):
-            channel = _CloseChannel()
+            def wake() -> None:
+                try:
+                    obj.put_nowait(_WAKE)
+                except queue_lib.Full:
+                    # a full queue has no reader blocked on get(); the
+                    # close event is observed at the next poll boundary
+                    pass
+
+            channel = _CloseChannel(wake=wake)
 
             def reader(spec: SourceSpec) -> Iterator[dict]:
                 closed = channel.token()
@@ -289,6 +314,8 @@ class Source:
                         item = obj.get(timeout=poll_s)
                     except queue_lib.Empty:
                         continue
+                    if item is _WAKE:
+                        continue  # close wake (maybe stale): re-check token
                     if item is None:
                         return
                     yield item
@@ -297,6 +324,42 @@ class Source:
         if callable(obj):
             return Source(lambda spec: iter(obj()), name="stream:callable")
         return Source(lambda spec: iter(obj), name="stream:iterable")
+
+    @staticmethod
+    def events(bus, topic: str = "events", *,
+               poll_s: float = 0.2) -> "Source":
+        """Subscribe to a ``repro.online.bus.EventBus`` topic as a Source.
+
+        The subscription is taken eagerly (no event published after this
+        call is missed even if iteration starts later) and each event's bus
+        arrival timestamp rides the ``Source.arrival`` spec, so the
+        executor's freshness machinery — the delivered-staleness histogram
+        and ``repro.online.shed``'s global oldest-first shedding — sees true
+        event ages.  ``close()`` wakes a blocked reader immediately; the
+        stream ends when the bus closes.  Don't ``rebatch``/``shard`` an
+        events source: arrival stamps are per published event, and respec'ing
+        the geometry would misalign them.
+        """
+        sub = bus.subscribe(topic)
+        channel = _CloseChannel(wake=sub.wake)
+        arrivals: dict = {}   # emit index -> arrival; popped once consumed
+
+        def reader(spec: SourceSpec) -> Iterator[dict]:
+            closed = channel.token()
+            idx = 0
+            while not closed.is_set():
+                ev = sub.get(timeout=poll_s, cancel=closed)
+                if ev is None:
+                    if sub.closed and not len(sub):
+                        return  # bus closed and drained
+                    continue    # timeout or close wake: re-check the token
+                batch, arrival = ev
+                arrivals[idx] = arrival
+                idx += 1
+                yield batch
+
+        src = Source(reader, name=f"events:{topic}", close_event=channel)
+        return src.arrival(lambda i: arrivals.pop(i, None))
 
 
 def as_source(obj) -> Source:

@@ -420,6 +420,7 @@ class EmbedCache:
         self.dim = dim
         rows, stage = cfg.rows, cfg.stage_slots()
         self.ext = jnp.zeros((n_tables, rows + stage, dim), dtype)
+        self.generation = 0  # bumped by invalidate() on state-version swaps
 
         def _apply(ext, tables, admit_slots, admit_rows, stage_rows):
             ce = rows + stage
@@ -433,6 +434,23 @@ class EmbedCache:
             return ext.at[:, rows:, :].set(stage_vals)
 
         self._apply = jax.jit(_apply, donate_argnums=(0,))
+
+    def invalidate(self) -> None:
+        """Zero every cache row on a vocabulary state-version swap.
+
+        An incremental refit (``CompiledPipeline.fit_incremental``) keeps
+        existing value→rank assignments, so the planner's slot→row mapping
+        stays valid across the swap — but cached row *contents* may belong
+        to the pre-swap embedding landscape, so the trainer drops them all.
+        Requires ``cfg.refresh=True`` to be bit-exact afterwards: refresh
+        re-admits every referenced resident from the current tables before
+        its next use, so no lookup ever reads an invalidated (zeroed) row.
+        ``generation`` counts swaps for observability.
+        """
+        import jax.numpy as jnp
+
+        self.ext = jnp.zeros_like(self.ext)
+        self.generation += 1
 
     def advance(self, tables, batch: dict) -> dict:
         import jax.numpy as jnp

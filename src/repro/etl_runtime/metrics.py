@@ -80,6 +80,26 @@ def stats_to_prometheus(stats: RuntimeStats, *, prefix: str = "repro_etl",
             lbl = _fmt_labels({**base, "stage": stage_name})
             lines.append(f"{metric}{lbl} {get(stats.stages[stage_name]):.9g}")
 
+    # delivered-batch staleness (seconds since Source.arrival) as a real
+    # Prometheus histogram, plus the ingest rate gauge — the online-training
+    # freshness signals (repro.online)
+    hist = getattr(stats, "staleness", None)
+    if hist is not None:
+        metric = f"{prefix}_delivered_staleness_seconds"
+        lines.append(f"# TYPE {metric} histogram")
+        cum = hist.cumulative()
+        for le, c in zip(hist.buckets, cum):
+            lbl = _fmt_labels({**base, "le": f"{le:g}"})
+            lines.append(f"{metric}_bucket{lbl} {c}")
+        lines.append(f'{metric}_bucket{_fmt_labels({**base, "le": "+Inf"})} '
+                     f"{cum[-1]}")
+        lines.append(f"{metric}_sum{_fmt_labels(base)} {hist.sum:.9g}")
+        lines.append(f"{metric}_count{_fmt_labels(base)} {hist.count}")
+    if hasattr(stats, "ingest_rate"):
+        metric = f"{prefix}_ingest_events_per_second"
+        lines.append(f"# TYPE {metric} gauge")
+        lines.append(f"{metric}{_fmt_labels(base)} {stats.ingest_rate():.9g}")
+
     # lookahead embedding-cache accounting, present when the executor ran
     # with a lookahead config (etl_runtime.lookahead.CacheStats)
     cache = getattr(stats, "cache", None)

@@ -148,6 +148,29 @@ class CreditQueue:
             self._cv.notify_all()
         return dropped
 
+    def peek_oldest_key(self, key_fn: Callable) -> Optional[float]:
+        """Smallest non-``None`` ``key_fn(item)`` among queued items (the
+        oldest arrival when keyed by envelope arrival), or ``None``.  Used
+        by the global freshness shedder (``repro.online.shed``) to find the
+        stalest in-flight event across all stage queues."""
+        with self._cv:
+            keys = [k for item in self._dq
+                    if (k := key_fn(item)) is not None]
+            return min(keys) if keys else None
+
+    def drop_by_key(self, key_fn: Callable, key: float):
+        """Remove and return the first queued item whose ``key_fn`` equals
+        ``key`` (``None`` if it raced downstream since the peek).  Counted
+        in ``dropped`` like every other freshness shed."""
+        with self._cv:
+            for i, item in enumerate(self._dq):
+                if key_fn(item) == key:
+                    del self._dq[i]
+                    self.dropped += 1
+                    self._cv.notify_all()
+                    return item
+            return None
+
     def get(self, timeout: Optional[float] = None):
         """Block until an item is available. Raises ``queue.Empty`` on
         timeout; returns ``_STOPPED`` if the executor stopped."""
@@ -203,6 +226,41 @@ class StageStats:
                 "occupancy": self.occupancy()}
 
 
+#: delivered-staleness histogram buckets (seconds); Prometheus ``le`` bounds
+STALENESS_BUCKETS = (0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5,
+                     1.0, 2.5, 5.0, 10.0)
+
+
+@dataclass
+class StalenessHistogram:
+    """Cumulative histogram of event age at delivery (seconds since the
+    Source.arrival stamp).  Rendered in the Prometheus histogram text
+    format by ``etl_runtime.metrics``."""
+
+    buckets: tuple = STALENESS_BUCKETS
+    counts: list = field(default_factory=lambda: [0] * (len(STALENESS_BUCKETS) + 1))
+    sum: float = 0.0
+    count: int = 0
+
+    def observe(self, age_s: float) -> None:
+        self.sum += age_s
+        self.count += 1
+        for i, le in enumerate(self.buckets):
+            if age_s <= le:
+                self.counts[i] += 1
+                return
+        self.counts[-1] += 1  # +Inf bucket
+
+    def cumulative(self) -> list:
+        """Per-``le`` cumulative counts (Prometheus bucket semantics),
+        ending with the +Inf bucket == ``count``."""
+        out, acc = [], 0
+        for c in self.counts:
+            acc += c
+            out.append(acc)
+        return out
+
+
 @dataclass
 class RuntimeStats:
     produced: int = 0
@@ -223,6 +281,42 @@ class RuntimeStats:
     # bounded so a long-running online job never grows it without limit
     delivered_arrivals: collections.deque = field(
         default_factory=lambda: collections.deque(maxlen=4096))
+    # event age at delivery (now - arrival): cumulative histogram for the
+    # Prometheus export plus a bounded recent window for exact percentiles
+    staleness: StalenessHistogram = field(default_factory=StalenessHistogram)
+    delivered_ages: collections.deque = field(
+        default_factory=lambda: collections.deque(maxlen=4096))
+    # ingest-side accounting for the events/sec gauge
+    ingest_events: int = 0
+    t_start: Optional[float] = None          # monotonic, set at start()
+    t_last_ingest: Optional[float] = None    # monotonic, last read item
+
+    def note_delivered(self, arrival: float,
+                       now: Optional[float] = None) -> None:
+        self.delivered_arrivals.append(arrival)
+        age = (time.monotonic() if now is None else now) - arrival
+        self.delivered_ages.append(age)
+        self.staleness.observe(max(0.0, age))
+
+    def note_ingest(self) -> None:
+        self.ingest_events += 1
+        self.t_last_ingest = time.monotonic()
+
+    def ingest_rate(self) -> float:
+        """Mean ingested events/sec over the active span (read-stage items
+        per second between start and the last read)."""
+        if not self.ingest_events or self.t_start is None:
+            return 0.0
+        span = (self.t_last_ingest or self.t_start) - self.t_start
+        return self.ingest_events / span if span > 0 else 0.0
+
+    def staleness_percentiles(self) -> dict:
+        """p50/p95/p99 event-age-at-delivery (seconds) over the recent
+        ``delivered_ages`` window; zeros before any stamped delivery."""
+        if not self.delivered_ages:
+            return {"p50": 0.0, "p95": 0.0, "p99": 0.0}
+        ages = np.asarray(self.delivered_ages)
+        return {f"p{p}": float(np.percentile(ages, p)) for p in (50, 95, 99)}
 
     # -- compatibility views over the per-stage accounting ----------------
 
@@ -688,6 +782,7 @@ class StreamingExecutor:
                    if self._host_key_fn is not None else None)
             arrival = (self._arrival_fn(idx)
                        if self._arrival_fn is not None else None)
+            self.stats.note_ingest()
             return _Envelope(raw, key, arrival)
 
         _pump_source(self._source, self._raw_q, self.stats.stages["read"],
@@ -740,6 +835,7 @@ class StreamingExecutor:
 
     def start(self) -> "StreamingExecutor":
         if not self._started:
+            self.stats.t_start = time.monotonic()
             self._reader.start()
             for s in self._stages:
                 s.start()
@@ -765,7 +861,7 @@ class StreamingExecutor:
             self.stats.consumed += 1
             dst.items += 1
             if item.arrival is not None:
-                self.stats.delivered_arrivals.append(item.arrival)
+                self.stats.note_delivered(item.arrival)
             self._adapt(wait)
             yield item.payload
 
@@ -783,7 +879,7 @@ class StreamingExecutor:
         self.stats.consumed += 1
         dst.items += 1
         if item.arrival is not None:
-            self.stats.delivered_arrivals.append(item.arrival)
+            self.stats.note_delivered(item.arrival)
         self._adapt(wait)
         return item.payload
 
@@ -810,6 +906,20 @@ class StreamingExecutor:
             rem = None if deadline is None else max(0.0, deadline - time.monotonic())
             t.join(rem)
         return all(not t.is_alive() for t in threads)
+
+    def stage_queues(self) -> dict:
+        """Live stage queues in pipeline order (upstream → downstream) —
+        the surface ``repro.online.shed`` sweeps for global oldest-first
+        freshness shedding.  With a lookahead stage the ready queue holds
+        *planned* batches (their cache admits must execute in order), so
+        shedders must not drop from it — see ``FreshnessShedder``."""
+        qs = {"raw": self._raw_q, "packed": self._packed_q}
+        if self._sorted_q is not None:
+            qs["sorted"] = self._sorted_q
+        if self._placed_q is not None:
+            qs["placed"] = self._placed_q
+        qs["ready"] = self._ready_q
+        return qs
 
     def queue_depths(self) -> dict:
         depths = {"raw": len(self._raw_q), "packed": len(self._packed_q),

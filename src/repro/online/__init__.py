@@ -1,0 +1,22 @@
+"""Continuous online-training service (paper §1: "continuous integration of
+massive volumes of new user interaction data into training pipelines").
+
+The batch reproduction runs finite epochs over static sources; this package
+turns it into a long-running daemon:
+
+- ``bus``     — in-process event bus (bounded topics, per-event arrival
+  timestamps, optional TCP transport) feeding ``Source.events(bus)``.
+- ``shed``    — freshness-aware global shedding: when ingest outruns
+  training, drop the oldest-by-arrival event across ALL stage queues.
+- ``service`` — ``OnlineTrainer``: interleaves the jitted train step with
+  incremental vocab refresh (rank-stable ``fit_incremental`` + atomic state
+  swap), periodic eval, and checkpoint rollover.
+"""
+
+from repro.online.bus import BusClient, BusServer, EventBus, replay
+from repro.online.service import OnlineConfig, OnlineStats, OnlineTrainer
+from repro.online.shed import FreshnessShedder, ShedStats
+
+__all__ = ["BusClient", "BusServer", "EventBus", "replay",
+           "OnlineConfig", "OnlineStats", "OnlineTrainer",
+           "FreshnessShedder", "ShedStats"]

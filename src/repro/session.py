@@ -233,10 +233,14 @@ class EtlJob:
 
     # ---- executor lifecycle ----------------------------------------------
 
-    def executor(self) -> StreamingExecutor:
+    def executor(self, transform=None) -> StreamingExecutor:
         """Build (without starting) the staged prefetching executor for this
-        job's pipeline + effective source."""
-        return StreamingExecutor(self.compiled, self.apply_source(),
+        job's pipeline + effective source.  ``transform`` overrides the
+        transform-stage callable while keeping the job's compiled semantics
+        and every other knob — ``repro.online.OnlineTrainer`` wraps the
+        compiled program to tag each batch with its vocabulary version."""
+        return StreamingExecutor(transform or self.compiled,
+                                 self.apply_source(),
                                  semantics=self.semantics,
                                  **self._executor_kw)
 

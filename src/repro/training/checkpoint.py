@@ -143,12 +143,27 @@ def restore(ckpt_dir: str, template: Any, step: Optional[int] = None,
 
 
 def prune(ckpt_dir: str, keep: int = 3):
-    """Delete all but the newest ``keep`` committed checkpoints."""
+    """Delete all but the newest ``keep`` *committed* checkpoints.
+
+    Only committed directories count toward ``keep``: a ``step_*`` dir
+    without the COMMITTED marker is crash garbage (the marker is written
+    inside the temp dir before the atomic rename, so an in-flight save is
+    never visible as an uncommitted ``step_*``) and is deleted outright —
+    it must not displace a committed checkpoint from the keep window.
+    """
     if not os.path.isdir(ckpt_dir):
         return
-    steps = sorted(s for s in (
-        int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
-        if d.startswith("step_")))
-    for s in steps[:-keep] if keep else steps:
+    committed, garbage = [], []
+    for d in os.listdir(ckpt_dir):
+        if not d.startswith("step_"):
+            continue
+        if os.path.exists(os.path.join(ckpt_dir, d, _COMMIT)):
+            committed.append(int(d.split("_")[1]))
+        else:
+            garbage.append(d)
+    for d in garbage:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+    committed.sort()
+    for s in committed[:-keep] if keep else committed:
         shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
                       ignore_errors=True)

@@ -182,3 +182,46 @@ def test_length_key_and_arrival_ride_the_spec():
     assert lookup(0) == 1.0 and lookup(5) is None
     by_fn = src.arrival(lambda i: 10.0 * i).spec.arrival_fn()
     assert by_fn(3) == 30.0
+
+
+def test_stream_queue_close_wakes_blocked_reader_immediately():
+    """Regression: close() used to leave a reader parked on an empty queue
+    sleeping out the rest of its poll interval (up to poll_s) before it
+    noticed; the wake sentinel must end it promptly."""
+    import threading
+    import time
+
+    q = queue.Queue()
+    src = Source.stream(q, poll_s=5.0)   # long poll: the old latency bound
+    done = threading.Event()
+    got = []
+
+    def run():
+        got.extend(iter(src))
+        done.set()
+
+    t = threading.Thread(target=run)
+    t.start()
+    time.sleep(0.1)                      # reader is now blocked on get()
+    t0 = time.monotonic()
+    src.close()
+    assert done.wait(timeout=2.0)
+    assert time.monotonic() - t0 < 1.0   # woke well inside poll_s
+    assert got == []
+    t.join()
+
+
+def test_stream_queue_close_with_full_queue_still_ends():
+    """The wake sentinel cannot be enqueued into a full queue (a full queue
+    has no reader blocked on an empty get); close must not raise and the
+    reader must still end on its close token without a wake."""
+    q = queue.Queue(maxsize=2)
+    q.put({"x": np.zeros(1)})
+    q.put({"x": np.ones(1)})
+    src = Source.stream(q, poll_s=0.05)
+    it = iter(src)
+    first = next(it)                     # reader now parked at yield
+    assert int(first["x"][0]) == 0
+    q.put({"x": np.full(1, 2.0)})        # full again: put_nowait(_WAKE) drops
+    src.close()                          # must not raise queue.Full
+    assert list(it) == []                # token observed; real items unread

@@ -199,3 +199,60 @@ def test_restart_resumes_from_checkpoint():
                                          ckpt_every=5, log_every=0),
                               async_ckpt=False)
         assert int(restored.step) == 15
+
+
+# ---------------- checkpoint rollover (online service posture) ----------------
+
+def _tiny_state(v=1.0):
+    return {"w": np.full((3, 3), v, np.float32)}
+
+
+def test_prune_interleaved_with_async_saves_keeps_exact():
+    """The online rollover pattern — save_async then prune each tick —
+    converges to exactly ``keep`` committed checkpoints, newest kept."""
+    with tempfile.TemporaryDirectory() as d:
+        acp = ck.AsyncCheckpointer()
+        for step in range(3, 31, 3):
+            acp.save_async(_tiny_state(step), d, step)
+            ck.prune(d, keep=2)
+        acp.wait()
+        ck.prune(d, keep=2)   # the last save commits after its prune
+        committed = sorted(
+            int(p.split("_")[1]) for p in os.listdir(d)
+            if p.startswith("step_")
+            and os.path.exists(os.path.join(d, p, "COMMITTED")))
+        assert committed == [27, 30]
+        assert ck.latest_step(d) == 30
+        restored = ck.restore(d, _tiny_state(0.0))
+        np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                      _tiny_state(30)["w"])
+
+
+def test_prune_keep_one_edge():
+    with tempfile.TemporaryDirectory() as d:
+        for step in (1, 2, 3):
+            ck.save(_tiny_state(step), d, step)
+        ck.prune(d, keep=1)
+        assert ck.latest_step(d) == 3
+        assert [p for p in os.listdir(d) if p.startswith("step_")] == \
+            ["step_00000003"]
+
+
+def test_prune_uncommitted_garbage_cannot_displace_committed():
+    """Crash-between-save-and-commit edge: an uncommitted ``step_*`` dir
+    (newer step number than every committed one) must not count toward the
+    keep window — pruning with keep=1 must keep the committed checkpoint
+    and delete the garbage, and restore must land on the committed one."""
+    with tempfile.TemporaryDirectory() as d:
+        ck.save(_tiny_state(7), d, 7)
+        # simulate a crash mid-save: step dir exists, no COMMITTED marker
+        crash = os.path.join(d, "step_00000009")
+        os.makedirs(crash)
+        with open(os.path.join(crash, "manifest.json"), "w") as fh:
+            fh.write("{}")
+        ck.prune(d, keep=1)
+        assert not os.path.isdir(crash)          # garbage swept
+        assert ck.latest_step(d) == 7            # committed one survived
+        restored = ck.restore(d, _tiny_state(0.0))
+        np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                      _tiny_state(7)["w"])
