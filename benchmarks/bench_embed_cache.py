@@ -101,11 +101,11 @@ def run_cell(alpha: float, cache_frac: float, n_batches: int) -> dict:
         payload = cache.advance(tables, plan.as_payload())
         slot = payload["emb_slot"].reshape(BATCH, NNZ)
         return ops.embedding_bag_cached(table, payload["emb_cache"][0],
-                                        slot, None, interpret=True)
+                                        slot, None)
 
     def uncached_step(idx):
         return ops.embedding_bag(table, jnp.asarray(idx),
-                                 partitions=PARTITIONS, interpret=True)
+                                 partitions=PARTITIONS)
 
     # bit-equality on the first batch (property tests sweep this harder)
     want = np.asarray(uncached_step(batches[0]))
@@ -163,7 +163,8 @@ def main(argv=None):
               f"{'PASS' if ok else 'FAIL'}", flush=True)
 
     if args.json is not None:
-        sha, interpret = git_sha(), True
+        from repro.kernels.ops import default_interpret
+        sha, interpret = git_sha(), default_interpret()
         for r in records:
             r["git_sha"] = sha
             r["interpret"] = interpret

@@ -1,8 +1,10 @@
 """Table 2 analogue: per-operator runtime across implementations.
 
 Paper: CPU vs RTX3090 vs A100 vs PipeRec per operator on Dataset I (45M rows).
-Here: numpy-CPU baseline vs XLA-jit vs fused-Pallas(interpret) on a scaled
-Dataset-I column; derived column reports Mrows/s so numbers are scale-free.
+Here: numpy-CPU baseline vs XLA-jit vs fused-Pallas on a scaled Dataset-I
+column; derived column reports Mrows/s so numbers are scale-free.  The
+Pallas row runs in the backend-resolved mode (compiled on TPU/GPU,
+interpret on CPU — ``kernels.backend.default_interpret``).
 """
 
 from __future__ import annotations
@@ -48,7 +50,7 @@ def main(rows: int = ROWS):
     mod = O.Modulus(512 * 1024)
     chain = lambda v: mod.jnp_expr(kref.hex2int_digit_major(v))
     fn = kops.fused_stage(chain, in_dtype=np.uint8, out_dtype=np.int32,
-                          hex_width=8, interpret=True)
+                          hex_width=8)
     jhex = jnp.asarray(hex_dm)
     t = timeit(lambda: fn(jhex).block_until_ready(), iters=2)
     emit("table2/Hex2Int+Modulus/pallas_fused", t,

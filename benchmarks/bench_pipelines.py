@@ -25,7 +25,11 @@ where CSE + one grouped kernel beats N fused kernels ~Nx.
 ``--json [PATH]`` additionally writes the machine-readable perf trajectory
 (default ``BENCH_6.json`` at the repo root) that the nightly CI job
 regenerates as an artifact; reviewers diff it to catch lowering
-regressions that the CSV stdout stream makes easy to miss.
+regressions that the CSV stdout stream makes easy to miss.  Every record
+is stamped with the resolved interpret mode, and ``--baseline PATH``
+compares the fresh run against a previous trajectory — REFUSING the
+comparison when the two were measured in different interpret modes
+(compiled-vs-interpret deltas are lowering differences, not regressions).
 """
 
 from __future__ import annotations
@@ -168,35 +172,80 @@ def run(datasets=("I", "II", "III")) -> list[dict]:
     return records
 
 
+def compare_to_baseline(fresh: dict, baseline: dict,
+                        *, tolerance: float = 0.30) -> list[str]:
+    """Speedup-row regressions of ``fresh`` against ``baseline``.
+
+    Raises ``SystemExit`` when the trajectories were measured in different
+    interpret modes: a compiled-vs-interpret delta is a *lowering*
+    difference, not a perf regression, and comparing across modes would
+    bury real regressions under it (or invent phantom ones).
+    """
+    fm, bm = fresh.get("interpret"), baseline.get("interpret")
+    if fm != bm:
+        raise SystemExit(
+            f"refusing cross-interpret-mode comparison: fresh run is "
+            f"interpret={fm}, baseline is interpret={bm}; regenerate the "
+            "baseline on this backend first")
+    def speedups(doc):
+        return {(r["dataset"], r["pipeline"], r["variant"]): r["speedup"]
+                for r in doc.get("records", []) if "speedup" in r}
+    fresh_s, base_s = speedups(fresh), speedups(baseline)
+    regressions = []
+    for key, base_v in sorted(base_s.items()):
+        fresh_v = fresh_s.get(key)
+        if fresh_v is not None and fresh_v < base_v * (1 - tolerance):
+            regressions.append(
+                f"{'/'.join(key)}: {fresh_v:.2f}x vs baseline "
+                f"{base_v:.2f}x")
+    return regressions
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--json", nargs="?", const="", default=None,
                     metavar="PATH",
                     help="also write the machine-readable trajectory "
                          "(default: BENCH_6.json at the repo root)")
+    ap.add_argument("--baseline", default=None, metavar="PATH",
+                    help="compare speedup rows against a previous --json "
+                         "trajectory; exits non-zero on regression and "
+                         "refuses cross-interpret-mode comparisons")
     ap.add_argument("--datasets", default="I,II,III",
                     help="comma-separated dataset subset (default: I,II,III)")
     args = ap.parse_args(argv)
     records = run(tuple(args.datasets.split(",")))
+    if args.json is None and args.baseline is None:
+        return
+    from repro.kernels.ops import default_interpret
+    sha, interpret = git_sha(), default_interpret()
+    # every record is self-describing: trajectory diffs stay attributable
+    # even when records are merged across runs/commits
+    for r in records:
+        r["git_sha"] = sha
+        r["interpret"] = interpret
+    doc = {
+        "bench": "fig13_15_16",
+        "git_sha": sha,
+        "interpret": interpret,
+        "rows": ROWS,
+        "fit_rows": FIT_ROWS,
+        "records": records,
+    }
     if args.json is not None:
-        from repro.kernels.ops import default_interpret
-        sha, interpret = git_sha(), default_interpret()
-        # every record is self-describing: trajectory diffs stay attributable
-        # even when records are merged across runs/commits
-        for r in records:
-            r["git_sha"] = sha
-            r["interpret"] = interpret
         path = pathlib.Path(args.json) if args.json else (
             pathlib.Path(__file__).resolve().parent.parent / "BENCH_6.json")
-        path.write_text(json.dumps({
-            "bench": "fig13_15_16",
-            "git_sha": sha,
-            "interpret": interpret,
-            "rows": ROWS,
-            "fit_rows": FIT_ROWS,
-            "records": records,
-        }, indent=2) + "\n")
+        path.write_text(json.dumps(doc, indent=2) + "\n")
         print(f"wrote {path}", flush=True)
+    if args.baseline is not None:
+        baseline = json.loads(pathlib.Path(args.baseline).read_text())
+        regressions = compare_to_baseline(doc, baseline)
+        if regressions:
+            for line in regressions:
+                print(f"REGRESSION {line}", flush=True)
+            raise SystemExit(1)
+        print(f"no regressions vs {args.baseline} "
+              f"(interpret={interpret})", flush=True)
 
 
 if __name__ == "__main__":

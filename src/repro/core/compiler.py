@@ -39,6 +39,13 @@ Either way the whole apply program is wrapped in one jit so a batch is a
 single device dispatch, and the numpy/jnp oracles are untouched — the
 three-backend bit-equality invariant pins fused and staged semantics alike.
 
+The pallas kernels run interpret (CPU validation) or compiled
+(Mosaic/Triton) per the ONE flag resolved here: ``interpret=None`` asks
+``kernels.backend.default_interpret`` (capability-based), the resolved
+bool re-judges fusion legality for the compiled lowering's VMEM extra
+(``reason_kind="mosaic-illegal"`` fallback, never a crash) and is handed
+to every kernel — kernels never re-resolve it.
+
 Vocabulary *fit* is streamed: chunked first-occurrence build, merged into a
 two-int32 global state, finalized into frozen rank tables.  On the pallas
 backend the fit chunk has the same two lowerings as apply, chosen per
@@ -76,7 +83,9 @@ from repro.core.dag import NodeType
 from repro.core.optimizer import optimize_plan
 from repro.core.planner import (CrossStage, DataflowGroup, DataflowProgram,
                                 ExecutionPlan, FitProgram, FusedStage,
-                                OneHotStage, PackOutput, VocabLookupStage)
+                                OneHotStage, PackOutput, VocabLookupStage,
+                                build_plan_programs)
+from repro.kernels import lanes
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 from repro.kernels.dataflow import (GroupOutput, StreamInput, TableInput,
@@ -159,11 +168,27 @@ class CompiledPipeline:
             raise ValueError(f"unknown fuse mode {fuse!r}")
         if optimize not in ("auto", "off"):
             raise ValueError(f"unknown optimize mode {optimize!r}")
+        # resolve the ONE interpret flag first: fusion legality depends on it
+        # (the compiled lowering's lane-padding / gather scratch shrinks what
+        # fits the VMEM budget), so it must be settled before any legality
+        # rebuild below — kernels never re-resolve, they are handed this flag
+        self.interpret = (kops.default_interpret() if interpret is None
+                          else bool(interpret))
+        if backend == "pallas" and not self.interpret and not plan.compiled_mode:
+            # re-judge every fusion slice for the compiled lowering; slices
+            # legal in interpret mode but over the compiled budget fall back
+            # staged with reason_kind "mosaic-illegal" (never a crash)
+            plan = dataclasses.replace(
+                plan, dataflows=[], fit_dataflows=[], groups=[],
+                opt_info=dict(plan.opt_info))
+            build_plan_programs(plan, compiled=True)
         if optimize == "auto":
             # plan-level rewrite (CSE + pushdown + grouping); applied for
             # every backend so numpy/jnp/pallas stay bit-identical over the
             # SAME rewritten plan — the optimizer equivalence property then
-            # pins optimize="auto" against "off" across backends
+            # pins optimize="auto" against "off" across backends.  The
+            # rewrite preserves plan.compiled_mode, so regrouping keeps
+            # judging merged slices with the mode resolved above.
             plan = optimize_plan(plan)
         self.plan = plan
         self.graph = graph
@@ -174,7 +199,6 @@ class CompiledPipeline:
         # the template's PipelineSemantics ride along so the runtime (and
         # EtlJob) see the declared freshness/ordering/batching contract
         self.semantics = semantics
-        self.interpret = kops.default_interpret() if interpret is None else interpret
         # per-output fused programs: only the pallas backend has a tile
         # codegen; jnp relies on XLA fusion and numpy is the oracle
         self._fused_programs: dict[str, DataflowProgram] = {}
@@ -383,8 +407,11 @@ class CompiledPipeline:
                 steps.append(TileStep("join", s.out_buf, (s.in_a, s.in_b),
                                       fn=s.op.jnp_expr2))
             elif isinstance(s, OneHotStage):
-                steps.append(TileStep("map", s.out_buf, (s.in_buf,),
-                                      fn=s.op.jnp_expr))
+                # lane-aligned in-kernel form: same values as op.jnp_expr,
+                # but without the trailing-axis reshape Mosaic rejects
+                steps.append(TileStep(
+                    "map", s.out_buf, (s.in_buf,),
+                    fn=(lambda x, d=s.op.depth: lanes.onehot_lanes(x, d))))
             else:  # pragma: no cover - legality passes reject these
                 raise NotImplementedError(type(s))
         return steps
@@ -396,7 +423,13 @@ class CompiledPipeline:
                               plan.buffers[b].hex_width)
                   for b in fp.source_buffers]
         steps = self._tile_steps(fp.stage_ids)
+        # partition the first-pos/count accumulators across the grid (the
+        # vocab-build HBM-bank pattern) once a single lane-padded block
+        # would be large: ~64K entries per partition keeps each (1, part)
+        # accumulator pair ~512 KiB of VMEM
+        partitions = max(1, -(-fp.capacity // 65536))
         return kops.fit_dataflow(inputs, steps, fp.in_buf, fp.capacity,
+                                 partitions=partitions,
                                  interpret=self.interpret)
 
     def _build_apply(self) -> Callable:
@@ -730,8 +763,10 @@ class CompiledPipeline:
         For staged outputs ``reason`` says what fell back and
         ``reason_kind`` classifies *why*: "budget" (VMEM working set),
         "stage-kind" (no tile codegen for a stage), "hbm-table"
-        (HBM-resident vocab), "hex-terminal", or "" when the backend/fuse
-        mode simply has no tile codegen.
+        (HBM-resident vocab), "hex-terminal", "mosaic-illegal" (fits the
+        logical budget but not the compiled lowering's lane-padded /
+        gather-scratch one — interpret mode would fuse it), or "" when
+        the backend/fuse mode simply has no tile codegen.
         """
         dfmap = {dp.output: dp for dp in self.plan.dataflows}
         groups = {name: self._active_groups[gi]

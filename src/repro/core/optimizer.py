@@ -48,7 +48,8 @@ import dataclasses
 from repro.core.planner import (CrossStage, DataflowGroup, ExecutionPlan,
                                 FusedStage, OneHotStage, Planner,
                                 VocabLookupStage, build_plan_programs,
-                                packed_output_bytes, stream_tile_bytes)
+                                compiled_extra_bytes, packed_output_bytes,
+                                stream_tile_bytes)
 
 _INPUT_ATTRS = ("in_buf", "in_a", "in_b")
 
@@ -178,7 +179,12 @@ def _merged_working_set(plan: ExecutionPlan, members) -> int:
     table_bytes = sum(4 * s.capacity for s in stages
                       if isinstance(s, VocabLookupStage))
     out_bytes = sum(packed_output_bytes(plan, po) for po, _ in members)
-    return 2 * (tile_bytes + out_bytes) + table_bytes
+    ws = 2 * (tile_bytes + out_bytes) + table_bytes
+    if plan.compiled_mode:
+        # merged slices are judged with the same compiled-lowering extra
+        # (lane padding + gather scratch) the per-output legality used
+        ws += compiled_extra_bytes(plan, stages, sources)
+    return ws
 
 
 def _make_group(plan: ExecutionPlan, members) -> DataflowGroup:

@@ -102,7 +102,13 @@ class Pipeline:
         verbatim — outputs are bit-identical either way.  ``fuse="auto"``
         (pallas backend) lowers each ``DataflowGroup`` / legal output to a
         single streaming dataflow kernel; ``fuse="off"`` forces the
-        stage-at-a-time lowering (the measurable baseline)."""
+        stage-at-a-time lowering (the measurable baseline).
+
+        ``interpret=None`` (default) resolves by backend capability
+        (``kernels.backend.default_interpret``): compiled Pallas on
+        TPU/GPU, interpret mode elsewhere.  The resolved flag threads
+        through planner legality, lowering, and every kernel — both modes
+        produce bit-identical outputs."""
         if not self._outputs:
             raise ValueError("pipeline has no outputs; call .output(...)")
         planner = Planner(self.graph, vmem_budget=vmem_budget, lanes=lanes,

@@ -35,19 +35,24 @@ import numpy as np
 
 from repro.core import operators as ops_lib
 from repro.core.dag import Graph, Node, NodeType
+from repro.kernels import lanes
 
 VMEM_TABLE_BUDGET = 4 * 1024 * 1024  # tables at or under this live in VMEM
 DATAFLOW_BLOCK_ROWS = 256  # row-tile granularity of the fused dataflow kernels
 
 # fallback taxonomy for the legality passes (lowering_report.reason_kind):
-#   "hex-terminal"  terminal is a raw hex block the packer cannot emit
-#   "stage-kind"    a sliced stage has no tile codegen
-#   "hbm-table"     a table / accumulator set is HBM-resident
-#   "budget"        the per-tile working set exceeds dataflow_vmem_budget
+#   "hex-terminal"    terminal is a raw hex block the packer cannot emit
+#   "stage-kind"      a sliced stage has no tile codegen
+#   "hbm-table"       a table / accumulator set is HBM-resident
+#   "budget"          the per-tile working set exceeds dataflow_vmem_budget
+#   "mosaic-illegal"  legal in interpret mode, but the compiled (Mosaic /
+#                     Triton) lowering's extra VMEM — lane-padded blocks and
+#                     banked-gather scratch — pushes the tile over budget
 FALLBACK_HEX_TERMINAL = "hex-terminal"
 FALLBACK_STAGE_KIND = "stage-kind"
 FALLBACK_HBM_TABLE = "hbm-table"
 FALLBACK_BUDGET = "budget"
+FALLBACK_MOSAIC = "mosaic-illegal"
 
 
 @dataclasses.dataclass
@@ -222,6 +227,12 @@ class ExecutionPlan:
     # recorded here so the optimizer re-checks merged slices with the same
     # budget the planner checked per-output slices with
     dataflow_vmem_budget: int = 0
+    # whether the legality passes judged slices for the *compiled* Pallas
+    # lowering (lane-padded blocks + banked-gather scratch on top of the
+    # logical working set) rather than interpret mode; set through
+    # build_plan_programs(compiled=...) so optimizer rebuilds re-judge
+    # with the same mode the compiler resolved
+    compiled_mode: bool = False
     # what the optimizer did to this plan (see ExecutionPlan.optimize_report)
     opt_info: dict = dataclasses.field(default_factory=dict)
 
@@ -519,8 +530,30 @@ def packed_output_bytes(plan: ExecutionPlan, po: PackOutput,
     return block_rows * padded_w * po.dtype.itemsize
 
 
+def compiled_extra_bytes(plan: ExecutionPlan, stages, sources,
+                         *, block_rows: int = DATAFLOW_BLOCK_ROWS) -> int:
+    """Extra per-tile VMEM the *compiled* (Mosaic/Triton) lowering holds on
+    top of the logical working set: lane-padding on every streamed buffer
+    tile and table, plus the banked-gather scratch each in-kernel lookup
+    materializes (``lanes.lane_gather`` broadcasts one bank per pass).
+    Interpret mode streams the logical widths, so this is zero there.
+    """
+    produced = {s.out_buf for s in stages}
+    pad = 0
+    for b in set(sources) | produced:
+        spec = plan.buffers[b]
+        extra_w = lanes.lane_pad(spec.width) - spec.width
+        pad += block_rows * spec.dtype.itemsize * extra_w * (spec.hex_width or 1)
+    for s in stages:
+        if isinstance(s, VocabLookupStage):
+            pad += 4 * (lanes.lane_pad(s.capacity) - s.capacity)
+            pad += lanes.gather_scratch_bytes(block_rows, s.capacity)
+    return pad
+
+
 def build_dataflow_program(plan: ExecutionPlan, po: PackOutput,
-                           *, block_rows: int = DATAFLOW_BLOCK_ROWS
+                           *, block_rows: int = DATAFLOW_BLOCK_ROWS,
+                           compiled: Optional[bool] = None
                            ) -> DataflowProgram:
     """Backward-slice the stages feeding ``po`` and check legality.
 
@@ -532,7 +565,14 @@ def build_dataflow_program(plan: ExecutionPlan, po: PackOutput,
     stage kind the tile codegen does not know — falls back to the staged
     path for this output only, with ``reason_kind`` naming the fallback
     class (budget vs stage kind vs HBM table vs hex terminal).
+
+    ``compiled`` (default: ``plan.compiled_mode``) judges the slice for
+    the compiled Pallas lowering: the lane-padded / gather-scratch extra
+    of ``compiled_extra_bytes`` is added, and a slice that fits the
+    logical budget but not the compiled one falls back "mosaic-illegal".
     """
+    if compiled is None:
+        compiled = plan.compiled_mode
     stage_ids = plan.output_slice(po)
     stages = [plan.stage_by_id(sid) for sid in stage_ids]
     sources = slice_sources(stages, po.buffers)
@@ -571,11 +611,20 @@ def build_dataflow_program(plan: ExecutionPlan, po: PackOutput,
         return illegal(f"per-tile working set {working_set} exceeds "
                        f"budget {plan.dataflow_vmem_budget}",
                        FALLBACK_BUDGET)
+    if compiled:
+        extra = compiled_extra_bytes(plan, stages, sources,
+                                     block_rows=block_rows)
+        if working_set + extra > plan.dataflow_vmem_budget:
+            return illegal(
+                f"compiled lowering needs {working_set + extra} bytes "
+                f"({extra} lane-pad/gather scratch on top of {working_set}) "
+                f"over budget {plan.dataflow_vmem_budget}", FALLBACK_MOSAIC)
     return DataflowProgram(po.name, stage_ids, sources, vocab_ids)
 
 
 def build_fit_program(plan: ExecutionPlan, vf: VocabFit,
-                      *, block_rows: int = DATAFLOW_BLOCK_ROWS) -> FitProgram:
+                      *, block_rows: int = DATAFLOW_BLOCK_ROWS,
+                      compiled: Optional[bool] = None) -> FitProgram:
     """Backward-slice the stages feeding ``vf`` and check fit legality.
 
     Legal programs lower decode + bound + first-occurrence/count build to
@@ -586,7 +635,13 @@ def build_fit_program(plan: ExecutionPlan, vf: VocabFit,
     as does any stage kind the fit tile codegen does not know or an
     over-budget working set — staged per vocab, never per pipeline;
     ``reason_kind`` names the fallback class either way.
+
+    ``compiled`` (default: ``plan.compiled_mode``) additionally accounts
+    the lane-padded accumulator blocks and streamed-tile padding of the
+    compiled lowering; over the top is "mosaic-illegal".
     """
+    if compiled is None:
+        compiled = plan.compiled_mode
     stage_ids = plan.fit_slice(vf)
     stages = [plan.stage_by_id(sid) for sid in stage_ids]
     sources = slice_sources(stages, [vf.in_buf])
@@ -613,16 +668,32 @@ def build_fit_program(plan: ExecutionPlan, vf: VocabFit,
     if working_set > plan.dataflow_vmem_budget:
         return illegal(f"per-tile working set {working_set} exceeds "
                        f"budget {plan.dataflow_vmem_budget}", FALLBACK_BUDGET)
+    if compiled:
+        extra = compiled_extra_bytes(plan, stages, sources,
+                                     block_rows=block_rows)
+        extra += 2 * 4 * (lanes.lane_pad(vf.capacity) - vf.capacity)
+        if working_set + extra > plan.dataflow_vmem_budget:
+            return illegal(
+                f"compiled lowering needs {working_set + extra} bytes "
+                f"({extra} lane-pad scratch on top of {working_set}) over "
+                f"budget {plan.dataflow_vmem_budget}", FALLBACK_MOSAIC)
     return FitProgram(vf.vocab_id, vf.in_buf, vf.capacity,
                       stage_ids, sources)
 
 
-def build_plan_programs(plan: ExecutionPlan) -> None:
+def build_plan_programs(plan: ExecutionPlan,
+                        compiled: Optional[bool] = None) -> None:
     """(Re)build the per-output and per-vocab fusion programs in place.
 
-    Called by the planner after step 5 and by the optimizer after every
-    plan rewrite — slices and legality always describe the current stages.
+    Called by the planner after step 5, by the optimizer after every plan
+    rewrite, and by the compiler once it has resolved its interpret flag —
+    slices and legality always describe the current stages.  ``compiled``
+    re-judges every slice for the compiled Pallas lowering and sticks
+    (recorded on ``plan.compiled_mode``) so later rebuilds — the optimizer
+    passes no flag — keep judging with the mode the compiler resolved.
     """
+    if compiled is not None:
+        plan.compiled_mode = bool(compiled)
     plan.dataflows = [build_dataflow_program(plan, po) for po in plan.pack]
     plan.fit_dataflows = [build_fit_program(plan, vf)
                           for vf in plan.vocab_fits]

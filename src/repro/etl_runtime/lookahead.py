@@ -471,7 +471,8 @@ class EmbedCache:
 
 
 def cached_embedding_lookup(tables, cache, slot, cold, orig, *,
-                            partitions: int = 1, interpret: bool = True):
+                            partitions: int = 1,
+                            interpret: "bool | None" = None):
     """Differentiable per-feature cached lookup: ``(B, T)`` single-hot
     indices against stacked ``tables [T, V, d]`` and ``cache [T, C, d]``,
     returning ``(B, T, d)``.

@@ -1,6 +1,6 @@
 """Streaming Pallas dataflow kernels (paper §3: the full FPGA pipeline).
 
-This module is the kernel-side half of plan-level fusion.  It hosts three
+This module is the kernel-side half of plan-level fusion.  It hosts the
 factories, in increasing order of fusion:
 
 ``make_fused_stage``
@@ -34,20 +34,33 @@ factories, in increasing order of fusion:
 ``make_fit_dataflow``
     The fit-phase sibling: the backward slice of one ``VocabFit`` — decode,
     bounding chains, joins — plus the chunk first-occurrence + count build
-    as ONE row-tiled kernel.  The two int32[capacity] accumulators are the
-    kernel outputs, revisited by every grid step (the paper's VocabGen keyed
-    reduction as a grid-carried VMEM table); value tiles never round-trip to
-    HBM between the upstream chains and the build.  The scatter form
-    (``.at[].min`` / ``.at[].add``) replaces the staged build kernel's
-    RAW-serialized loop — the whole tile updates per step.
+    as ONE row-tiled kernel.  The two int32 accumulators are the kernel
+    outputs, partitioned across grid dim 0 (the paper's "P HBM banks",
+    same structure as ``kernels/vocab.py``) and revisited by every row
+    tile of grid dim 1.  In interpret mode each partition builds with
+    whole-tile masked scatters (``.at[].min`` / ``.at[].add``); in
+    compiled mode — where scatter does not lower — the same masks guard a
+    RAW-serialized per-row update loop mirroring the staged build kernel
+    (dynamic scalar stores into the partition block, the paper's
+    RAW-limited II).  Both forms fold identical (position, count)
+    contributions with order-independent combiners (min / add), so the
+    modes are bit-identical by construction and the compiled-parity suite
+    pins it wherever a compiled backend exists.
 
 Vocabulary tables enter the dataflow kernel pre-resolved: the compiler folds
 the OOV rule (``miss -> n_unique``) into the table before the call, so the
-in-kernel lookup is a pure partitionable gather.
+in-kernel lookup is a pure banked lane gather (``kernels.lanes.lane_gather``
+— no flat reshape, no whole-table broadcast).
 
-Tiling: block columns are the natural buffer widths (the packer already
-handles sub-128 lanes); block rows are multiples of 8 (sublanes); the grid
-streams row blocks — the paper's batch-of-rows FIFO granularity.
+Tiling: every memory block is lane-aligned — source, table, and packed
+output blocks are padded up to multiples of 128 lanes host-side (padding
+lanes carry zeros and are sliced off in-kernel / on return), block rows are
+multiples of 8 sublanes, and the grid streams row blocks — the paper's
+batch-of-rows FIFO granularity, in the shape Mosaic actually tiles.
+
+``interpret=None`` on every factory resolves through
+``kernels.backend.default_interpret`` (compiled wherever a Mosaic/Triton
+target exists, interpret otherwise); passing an explicit bool pins the mode.
 """
 
 from __future__ import annotations
@@ -61,9 +74,16 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.kernels import lanes
+from repro.kernels.backend import default_interpret
+
 
 def _round_up(x: int, m: int) -> int:
     return -(-x // m) * m
+
+
+def _resolve_interpret(interpret) -> bool:
+    return default_interpret() if interpret is None else bool(interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -72,12 +92,13 @@ def _round_up(x: int, m: int) -> int:
 
 def make_fused_stage(chain_fn, *, in_dtype, out_dtype, hex_width: int = 0,
                      block_rows: int = 256, block_cols: int = 512,
-                     interpret: bool = True):
+                     interpret: Optional[bool] = None):
     """Build a jit-compatible fn: x -> fused(x).
 
     chain_fn: elementwise block function. For hex inputs it receives the
     (w, br, bc) uint8 block and must fold the leading digit axis itself.
     """
+    interpret = _resolve_interpret(interpret)
 
     def kernel(x_ref, o_ref):
         o_ref[...] = chain_fn(x_ref[...]).astype(o_ref.dtype)
@@ -90,7 +111,7 @@ def make_fused_stage(chain_fn, *, in_dtype, out_dtype, hex_width: int = 0,
         else:
             rows, cols = x.shape
         br = min(block_rows, _round_up(rows, 8))
-        bc = min(block_cols, _round_up(cols, 128))
+        bc = min(_round_up(block_cols, 128), lanes.lane_pad(cols))
         rp, cp = _round_up(rows, br), _round_up(cols, bc)
         # pad to block multiples (padding lanes carry zeros; sliced off below)
         if hex_width:
@@ -126,35 +147,46 @@ def vmem_bytes_estimate(in_dtype, out_dtype, hex_width: int,
 # ---------------------------------------------------------------------------
 
 def make_packer(col_widths, in_dtypes, out_dtype, *, pad_cols_to: int = 128,
-                block_rows: int = 256, interpret: bool = True):
-    """Build fn(blocks...) -> packed [rows, padded(sum(col_widths))]."""
+                block_rows: int = 256, interpret: Optional[bool] = None):
+    """Build fn(blocks...) -> packed [rows, padded(sum(col_widths))].
+
+    Column blocks and the packed block are lane-padded to 128-multiples for
+    the kernel; the logical ``pad_cols_to`` layout width is sliced back out
+    on return.
+    """
+    interpret = _resolve_interpret(interpret)
     col_widths = [int(w) for w in col_widths]
     total = sum(col_widths)
     padded = _round_up(total, pad_cols_to)
+    lane_padded = lanes.lane_pad(padded)
+    lane_widths = [lanes.lane_pad(w) for w in col_widths]
     offsets = np.cumsum([0] + col_widths).tolist()
 
     def kernel(*refs):
         o_ref = refs[-1]
-        o_ref[...] = jnp.zeros_like(o_ref)
+        o_ref[...] = jnp.zeros(o_ref.shape, o_ref.dtype)
         for k, x_ref in enumerate(refs[:-1]):
-            o_ref[:, offsets[k]:offsets[k + 1]] = x_ref[...].astype(o_ref.dtype)
+            x = x_ref[...][:, :col_widths[k]]
+            o_ref[:, offsets[k]:offsets[k + 1]] = x.astype(o_ref.dtype)
 
     def run(*blocks):
         assert len(blocks) == len(col_widths)
         rows = blocks[0].shape[0]
         br = min(block_rows, _round_up(rows, 8))
         rp = _round_up(rows, br)
-        padded_blocks = [jnp.pad(b, ((0, rp - rows), (0, 0))) for b in blocks]
+        padded_blocks = [
+            jnp.pad(b, ((0, rp - rows), (0, lw - b.shape[1])))
+            for b, lw in zip(blocks, lane_widths)]
         out = pl.pallas_call(
             kernel,
             grid=(rp // br,),
-            in_specs=[pl.BlockSpec((br, w), lambda r: (r, 0))
-                      for w in col_widths],
-            out_specs=pl.BlockSpec((br, padded), lambda r: (r, 0)),
-            out_shape=jax.ShapeDtypeStruct((rp, padded), out_dtype),
+            in_specs=[pl.BlockSpec((br, lw), lambda r: (r, 0))
+                      for lw in lane_widths],
+            out_specs=pl.BlockSpec((br, lane_padded), lambda r: (r, 0)),
+            out_shape=jax.ShapeDtypeStruct((rp, lane_padded), out_dtype),
             interpret=interpret,
         )(*padded_blocks)
-        return out[:rows]
+        return out[:rows, :padded]
 
     return run
 
@@ -200,24 +232,55 @@ class TileStep:
     table: int = -1
 
 
-def _row_tile_sources(inputs, srcs, br: int, rp: int):
-    """Pad each raw source to the row-tile multiple and emit its BlockSpec
-    (hex sources are digit-major 3-d; the digit axis is not tiled)."""
+def _row_tile_sources(inputs, srcs, br: int, rp: int,
+                      partitioned: bool = False):
+    """Pad each raw source to the row-tile multiple and a lane-multiple
+    width, and emit its BlockSpec (hex sources are digit-major 3-d; the
+    digit axis is not tiled).  The kernel slices each tile back to its
+    natural width, so padding lanes never enter the step program.
+
+    ``partitioned`` emits index maps for the fit kernel's 2-d grid
+    ``(partitions, row_tiles)``: every partition re-streams all row tiles.
+    """
     rows = srcs[0].shape[1] if inputs[0].hex_width else srcs[0].shape[0]
     padded_srcs, in_specs = [], []
     for inp, x in zip(inputs, srcs):
+        wp = lanes.lane_pad(inp.width)
         if inp.hex_width:
-            padded_srcs.append(jnp.pad(x, ((0, 0), (0, rp - rows), (0, 0))))
-            in_specs.append(pl.BlockSpec((inp.hex_width, br, inp.width),
-                                         lambda r: (0, r, 0)))
+            padded_srcs.append(
+                jnp.pad(x, ((0, 0), (0, rp - rows), (0, wp - inp.width))))
+            imap = ((lambda p, r: (0, r, 0)) if partitioned
+                    else (lambda r: (0, r, 0)))
+            in_specs.append(pl.BlockSpec((inp.hex_width, br, wp), imap))
         else:
-            padded_srcs.append(jnp.pad(x, ((0, rp - rows), (0, 0))))
-            in_specs.append(pl.BlockSpec((br, inp.width),
-                                         lambda r: (r, 0)))
+            padded_srcs.append(
+                jnp.pad(x, ((0, rp - rows), (0, wp - inp.width))))
+            imap = ((lambda p, r: (r, 0)) if partitioned
+                    else (lambda r: (r, 0)))
+            in_specs.append(pl.BlockSpec((br, wp), imap))
     return padded_srcs, in_specs
 
 
-def _run_tile_steps(env: dict, steps, tbl_refs):
+def _load_source_env(inputs, src_refs) -> dict:
+    """Read each lane-padded source tile and slice to its natural width."""
+    env = {}
+    for inp, r in zip(inputs, src_refs):
+        env[inp.name] = r[...][..., :inp.width]
+    return env
+
+
+def _pad_tables(tables, tbls):
+    """Lane-pad each (1, capacity) resolved table and emit its BlockSpec."""
+    padded, specs = [], []
+    for t, a in zip(tables, tbls):
+        assert a.shape == (1, t.capacity), (a.shape, t.capacity)
+        cp = lanes.lane_pad(t.capacity)
+        padded.append(jnp.pad(a, ((0, 0), (0, cp - t.capacity))))
+        specs.append(pl.BlockSpec((1, cp), lambda r: (0, 0)))
+    return padded, specs
+
+
+def _run_tile_steps(env: dict, steps, tbl_refs, capacities):
     """Execute the TileStep program over VMEM-resident tiles in ``env``."""
     for st in steps:
         if st.kind == "map":
@@ -225,11 +288,10 @@ def _run_tile_steps(env: dict, steps, tbl_refs):
         elif st.kind == "join":
             env[st.out] = st.fn(env[st.args[0]], env[st.args[1]])
         elif st.kind == "lookup":
-            tbl = tbl_refs[st.table][...]  # (1, capacity), OOV-resolved
+            tbl = tbl_refs[st.table][...]  # (1, lane_pad(capacity)), resolved
             x = env[st.args[0]]
-            safe = jnp.clip(x, 0, tbl.shape[-1] - 1)
-            env[st.out] = jnp.take(tbl[0], safe.reshape(-1),
-                                   axis=0).reshape(x.shape)
+            safe = jnp.clip(x, 0, capacities[st.table] - 1)
+            env[st.out] = lanes.lane_gather(tbl, safe)
         else:
             raise NotImplementedError(st.kind)
 
@@ -239,27 +301,31 @@ def make_output_dataflow(inputs: Sequence[StreamInput],
                          steps: Sequence[TileStep],
                          terminals: Sequence[tuple],
                          out_dtype, *, pad_cols_to: int = 1,
-                         block_rows: int = 256, interpret: bool = True):
+                         block_rows: int = 256,
+                         interpret: Optional[bool] = None):
     """Build fn(*sources, *tables) -> packed [rows, padded(sum widths)].
 
     ``terminals`` is the ordered list of ``(buffer_name, width)`` pairs the
     packer epilogue writes; names refer to stream inputs or step outputs.
     The returned callable issues exactly ONE ``pallas_call``.
     """
+    interpret = _resolve_interpret(interpret)
     inputs = list(inputs)
     tables = list(tables)
     steps = list(steps)
     terminals = [(str(n), int(w)) for n, w in terminals]
     total = sum(w for _, w in terminals)
     padded = _round_up(max(total, 1), max(pad_cols_to, 1))
+    lane_padded = lanes.lane_pad(padded)
     offsets = np.cumsum([0] + [w for _, w in terminals]).tolist()
+    capacities = [t.capacity for t in tables]
     n_src = len(inputs)
 
     def kernel(*refs):
         src_refs, tbl_refs, o_ref = refs[:n_src], refs[n_src:-1], refs[-1]
-        env = {inp.name: r[...] for inp, r in zip(inputs, src_refs)}
-        _run_tile_steps(env, steps, tbl_refs)
-        o_ref[...] = jnp.zeros_like(o_ref)
+        env = _load_source_env(inputs, src_refs)
+        _run_tile_steps(env, steps, tbl_refs, capacities)
+        o_ref[...] = jnp.zeros(o_ref.shape, o_ref.dtype)
         for (name, w), off in zip(terminals, offsets):
             o_ref[:, off:off + w] = env[name].astype(o_ref.dtype)
 
@@ -270,18 +336,16 @@ def make_output_dataflow(inputs: Sequence[StreamInput],
         br = min(block_rows, _round_up(rows, 8))
         rp = _round_up(rows, br)
         padded_srcs, in_specs = _row_tile_sources(inputs, srcs, br, rp)
-        for t, a in zip(tables, tbls):
-            assert a.shape == (1, t.capacity), (a.shape, t.capacity)
-            in_specs.append(pl.BlockSpec((1, t.capacity), lambda r: (0, 0)))
+        padded_tbls, tbl_specs = _pad_tables(tables, tbls)
         out = pl.pallas_call(
             kernel,
             grid=(rp // br,),
-            in_specs=in_specs,
-            out_specs=pl.BlockSpec((br, padded), lambda r: (r, 0)),
-            out_shape=jax.ShapeDtypeStruct((rp, padded), out_dtype),
+            in_specs=in_specs + tbl_specs,
+            out_specs=pl.BlockSpec((br, lane_padded), lambda r: (r, 0)),
+            out_shape=jax.ShapeDtypeStruct((rp, lane_padded), out_dtype),
             interpret=interpret,
-        )(*padded_srcs, *tbls)
-        return out[:rows]
+        )(*padded_srcs, *padded_tbls)
+        return out[:rows, :padded]
 
     return run
 
@@ -304,7 +368,8 @@ def make_group_dataflow(inputs: Sequence[StreamInput],
                         tables: Sequence[TableInput],
                         steps: Sequence[TileStep],
                         outputs: Sequence[GroupOutput], *,
-                        block_rows: int = 256, interpret: bool = True):
+                        block_rows: int = 256,
+                        interpret: Optional[bool] = None):
     """Build fn(*sources, *tables) -> tuple of packed arrays, one per output.
 
     The grouped form of ``make_output_dataflow``: the merged backward slice
@@ -315,26 +380,30 @@ def make_group_dataflow(inputs: Sequence[StreamInput],
     offsets of its own packed block — stages shared across outputs are
     computed once per tile instead of once per output.
     """
+    interpret = _resolve_interpret(interpret)
     inputs = list(inputs)
     tables = list(tables)
     steps = list(steps)
     outputs = list(outputs)
+    capacities = [t.capacity for t in tables]
     n_src = len(inputs)
     n_out = len(outputs)
-    paddeds, offsets_per_out = [], []
+    paddeds, lane_paddeds, offsets_per_out = [], [], []
     for g in outputs:
         widths = [int(w) for _, w in g.terminals]
-        paddeds.append(_round_up(max(sum(widths), 1), max(g.pad_cols_to, 1)))
+        padded = _round_up(max(sum(widths), 1), max(g.pad_cols_to, 1))
+        paddeds.append(padded)
+        lane_paddeds.append(lanes.lane_pad(padded))
         offsets_per_out.append(np.cumsum([0] + widths).tolist())
 
     def kernel(*refs):
         src_refs = refs[:n_src]
         tbl_refs = refs[n_src:-n_out]
         out_refs = refs[-n_out:]
-        env = {inp.name: r[...] for inp, r in zip(inputs, src_refs)}
-        _run_tile_steps(env, steps, tbl_refs)
+        env = _load_source_env(inputs, src_refs)
+        _run_tile_steps(env, steps, tbl_refs, capacities)
         for g, o_ref, offs in zip(outputs, out_refs, offsets_per_out):
-            o_ref[...] = jnp.zeros_like(o_ref)
+            o_ref[...] = jnp.zeros(o_ref.shape, o_ref.dtype)
             for (name, w), off in zip(g.terminals, offs):
                 o_ref[:, off:off + w] = env[name].astype(o_ref.dtype)
 
@@ -345,20 +414,18 @@ def make_group_dataflow(inputs: Sequence[StreamInput],
         br = min(block_rows, _round_up(rows, 8))
         rp = _round_up(rows, br)
         padded_srcs, in_specs = _row_tile_sources(inputs, srcs, br, rp)
-        for t, a in zip(tables, tbls):
-            assert a.shape == (1, t.capacity), (a.shape, t.capacity)
-            in_specs.append(pl.BlockSpec((1, t.capacity), lambda r: (0, 0)))
+        padded_tbls, tbl_specs = _pad_tables(tables, tbls)
         outs = pl.pallas_call(
             kernel,
             grid=(rp // br,),
-            in_specs=in_specs,
-            out_specs=[pl.BlockSpec((br, p), lambda r: (r, 0))
-                       for p in paddeds],
-            out_shape=[jax.ShapeDtypeStruct((rp, p), g.out_dtype)
-                       for g, p in zip(outputs, paddeds)],
+            in_specs=in_specs + tbl_specs,
+            out_specs=[pl.BlockSpec((br, lp), lambda r: (r, 0))
+                       for lp in lane_paddeds],
+            out_shape=[jax.ShapeDtypeStruct((rp, lp), g.out_dtype)
+                       for g, lp in zip(outputs, lane_paddeds)],
             interpret=interpret,
-        )(*padded_srcs, *tbls)
-        return tuple(o[:rows] for o in outs)
+        )(*padded_srcs, *padded_tbls)
+        return tuple(o[:rows, :p] for o, p in zip(outs, paddeds))
 
     return run
 
@@ -373,36 +440,57 @@ ABSENT32 = 2 ** 31 - 1  # matches kernels.vocab / kernels.ref chunk sentinel
 def make_fit_dataflow(inputs: Sequence[StreamInput],
                       steps: Sequence[TileStep],
                       value_buf: str, capacity: int, *,
-                      block_rows: int = 256, interpret: bool = True):
+                      partitions: int = 1, block_rows: int = 256,
+                      interpret: Optional[bool] = None,
+                      build_form: str = "auto"):
     """Build fn(*sources) -> (first_pos int32[capacity], counts int32[capacity]).
 
-    One ``pallas_call``: row tiles of every raw source stream through the
-    ``TileStep`` chain (map/join only — lookups cannot precede a fit), the
-    resulting ``value_buf`` tile is flattened row-major, and the chunk
-    first-occurrence positions and occurrence counts accumulate into two
-    VMEM-resident tables revisited by every grid step.  Semantics match the
-    staged path exactly: positions are global row-major flat offsets over the
-    unpadded chunk, ``ABSENT32`` marks values absent from the chunk, and
-    counts sum every occurrence (the frequency-filter input).
+    One ``pallas_call`` over grid ``(partitions, row_tiles)``: row tiles of
+    every raw source stream through the ``TileStep`` chain (map/join only —
+    lookups cannot precede a fit), and each table partition accumulates the
+    chunk first-occurrence positions and occurrence counts of its value
+    range into a lane-padded VMEM block revisited by every row tile (the
+    paper's "P HBM banks"; partitions re-scan the stream in parallel, the
+    P-fold pass ``kernels/vocab.py`` and ``embedding_bag`` already use).
+    Semantics match the staged path exactly: positions are global row-major
+    flat offsets over the unpadded chunk, ``ABSENT32`` marks values absent
+    from the chunk, counts sum every occurrence (the frequency-filter
+    input), and negative / out-of-capacity values drop.
 
-    The build uses whole-tile scatter updates rather than the staged
-    kernel's serial fori_loop; like the in-kernel one-hot of the apply
-    dataflow this is interpret-mode-validated — real-TPU Mosaic lowering is
-    tracked as a ROADMAP hardware-pass item.
+    The per-partition update has two Mosaic-equivalent forms selected by
+    the resolved ``interpret`` flag: whole-tile masked scatters
+    (``.at[].min`` / ``.at[].add``) in interpret mode, and the staged build
+    kernel's RAW-serialized scalar-store loop in compiled mode (scatter
+    does not lower under Mosaic).  Both fold identical contributions with
+    order-independent combiners, so the outputs are bit-identical; the
+    compiled-parity suite pins this on hardware, and ``build_form`` lets
+    CPU tests pin it too: "auto" selects by the resolved interpret flag,
+    "scatter" / "serial" force one form (the serial form also runs under
+    interpret mode, where both forms must agree bit-for-bit).
     """
+    if build_form not in ("auto", "scatter", "serial"):
+        raise ValueError(f"unknown build_form {build_form!r}")
     inputs = list(inputs)
     steps = list(steps)
+    interpret = _resolve_interpret(interpret)
+    serial_build = (build_form == "serial"
+                    or (build_form == "auto" and not interpret))
     n_src = len(inputs)
+    partitions = max(int(partitions), 1)
+    part = -(-capacity // partitions)       # logical values per partition
+    part_pad = lanes.lane_pad(part)         # lane-padded block width
 
     def kernel(*refs, n_rows: int):
         src_refs, fp_ref, cnt_ref = refs[:n_src], refs[-2], refs[-1]
+        p = pl.program_id(0)
+        lo = p * part
 
-        @pl.when(pl.program_id(0) == 0)
+        @pl.when(pl.program_id(1) == 0)
         def _init():
-            fp_ref[...] = jnp.full_like(fp_ref, ABSENT32)
-            cnt_ref[...] = jnp.zeros_like(cnt_ref)
+            fp_ref[...] = jnp.full(fp_ref.shape, ABSENT32, fp_ref.dtype)
+            cnt_ref[...] = jnp.zeros(cnt_ref.shape, cnt_ref.dtype)
 
-        env = {inp.name: r[...] for inp, r in zip(inputs, src_refs)}
+        env = _load_source_env(inputs, src_refs)
         for st in steps:
             if st.kind == "map":
                 env[st.out] = st.fn(env[st.args[0]])
@@ -412,38 +500,63 @@ def make_fit_dataflow(inputs: Sequence[StreamInput],
                 raise NotImplementedError(st.kind)
         vals = env[value_buf]
         br, width = vals.shape
-        # global row-major flat position of each element; padding rows are
-        # masked out (position -> ABSENT32 so min is a no-op, count += 0)
-        row = pl.program_id(0) * br + jax.lax.broadcasted_iota(
-            jnp.int32, vals.shape, 0)
-        col = jax.lax.broadcasted_iota(jnp.int32, vals.shape, 1)
-        # match the staged build kernel's in-bounds check exactly: values
-        # >= capacity drop via the scatter's OOB rule, but negatives must be
-        # masked here — JAX index normalization would wrap them to the end
-        # of the table instead of dropping them
-        ok = (row < n_rows) & (vals >= 0)
-        pos = jnp.where(ok, row * width + col, ABSENT32).reshape(-1)
-        idx = jnp.where(ok, vals, 0).reshape(-1)  # masked entries are no-ops
-        one = jnp.where(ok, 1, 0).astype(jnp.int32).reshape(-1)
-        fp_ref[...] = fp_ref[...].at[0, idx].min(pos)
-        cnt_ref[...] = cnt_ref[...].at[0, idx].add(one)
+        row0 = pl.program_id(1) * br
+
+        if not serial_build:
+            # whole-tile masked scatter into this partition's block
+            row = row0 + jax.lax.broadcasted_iota(jnp.int32, vals.shape, 0)
+            col = jax.lax.broadcasted_iota(jnp.int32, vals.shape, 1)
+            local = vals - lo
+            ok = ((row < n_rows) & (vals >= 0) & (vals < capacity)
+                  & (local >= 0) & (local < part))
+            pos = jnp.where(ok, row * width + col, ABSENT32).reshape(-1)
+            idx = jnp.where(ok, local, 0).reshape(-1)  # masked -> no-ops
+            one = jnp.where(ok, 1, 0).astype(jnp.int32).reshape(-1)
+            fp_ref[...] = fp_ref[...].at[0, idx].min(pos)
+            cnt_ref[...] = cnt_ref[...].at[0, idx].add(one)
+        else:
+            # Mosaic-legal form: serial per-row scan with dynamic scalar
+            # stores (the staged vocab build's RAW-serialized II); min/add
+            # are order-independent, so this folds the exact same values
+            def body(r, _):
+                gr = row0 + r
+                for c in range(width):  # static lane offset per column
+                    v = vals[r, c]
+                    local = v - lo
+
+                    @pl.when((gr < n_rows) & (v >= 0) & (v < capacity)
+                             & (local >= 0) & (local < part))
+                    def _upd(local=local, pos=gr * width + c):
+                        fp_ref[0, local] = jnp.minimum(fp_ref[0, local], pos)
+                        cnt_ref[0, local] = cnt_ref[0, local] + 1
+
+                return 0
+
+            jax.lax.fori_loop(0, br, body, 0)
 
     def run(*srcs):
         assert len(srcs) == n_src, (len(srcs), n_src)
         rows = srcs[0].shape[1] if inputs[0].hex_width else srcs[0].shape[0]
         br = min(block_rows, _round_up(rows, 8))
         rp = _round_up(rows, br)
-        padded_srcs, in_specs = _row_tile_sources(inputs, srcs, br, rp)
+        padded_srcs, in_specs = _row_tile_sources(
+            inputs, srcs, br, rp, partitioned=True)
         fp, cnt = pl.pallas_call(
             functools.partial(kernel, n_rows=rows),
-            grid=(rp // br,),
+            grid=(partitions, rp // br),
             in_specs=in_specs,
-            out_specs=[pl.BlockSpec((1, capacity), lambda r: (0, 0)),
-                       pl.BlockSpec((1, capacity), lambda r: (0, 0))],
-            out_shape=[jax.ShapeDtypeStruct((1, capacity), jnp.int32),
-                       jax.ShapeDtypeStruct((1, capacity), jnp.int32)],
+            out_specs=[pl.BlockSpec((1, part_pad), lambda p, r: (0, p)),
+                       pl.BlockSpec((1, part_pad), lambda p, r: (0, p))],
+            out_shape=[
+                jax.ShapeDtypeStruct((1, partitions * part_pad), jnp.int32),
+                jax.ShapeDtypeStruct((1, partitions * part_pad), jnp.int32)],
             interpret=interpret,
         )(*padded_srcs)
-        return fp[0], cnt[0]
+        # un-interleave the lane padding: block p holds logical values
+        # [p*part, (p+1)*part) in its first ``part`` lanes
+        def unpad(t):
+            t = t.reshape(partitions, part_pad)[:, :part].reshape(-1)
+            return t[:capacity]
+        return unpad(fp), unpad(cnt)
 
     return run

@@ -27,109 +27,132 @@ logical indices: a gather phase materializes the per-(sample, k) rows tile —
 each entry written by exactly one pass, so no float accumulation order is
 involved — and one shared ``jnp`` sum pools over ``nnz``.  ``-1`` indices are
 sentinels and contribute zero (packer padding / empty bag lanes).
+
+Block shapes are hardware-tiled: the embedding ``dim`` is lane-padded to a
+128-multiple (zero lanes, sliced off before pooling), index blocks carry
+``nnz`` lane-padded with ``-1`` sentinels and the kernel slices them to the
+sublane-padded ``nnz`` the 3-D rows tile uses, and partition row counts are
+sublane-padded (padded rows are unreachable: indices are bounded by the
+vocab and masked in-kernel).  The row gathers are reshape-free 2-D-indexed
+``jnp.take`` along the row axis — the gather shape Mosaic's rule accepts.
+
+``interpret=None`` resolves through ``kernels.backend.default_interpret``.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import lanes
+from repro.kernels.backend import default_interpret
 
 
 def _round_up(x: int, m: int) -> int:
     return -(-x // m) * m
 
 
-def _pool(rows, batch: int):
-    """Shared pooling epilogue: slice off batch padding, sum over nnz.
+def _pool(rows, batch: int, nnz: int, dim: int):
+    """Shared pooling epilogue: slice off batch/nnz/dim padding, sum over nnz.
 
     Both kernels feed identical row tiles through this exact op, which is
     what makes cached-vs-uncached equality bit-level rather than allclose.
     """
-    return rows[:batch].sum(axis=1)
+    return rows[:batch, :nnz, :dim].sum(axis=1)
 
 
 def _partitioned(table, partitions: int):
     """Split the vocab across ``partitions``, zero-padding the last partition
-    so arbitrary vocab sizes work (rows >= vocab are unreachable: indices are
-    bounded by the vocab and out-of-range values are masked in-kernel)."""
+    (and rounding each partition up to the sublane tile) so arbitrary vocab
+    sizes work; the dim axis is lane-padded.  Padded rows are unreachable:
+    indices are bounded by the vocab and out-of-range values are masked
+    in-kernel."""
     vocab, dim = table.shape
     p = max(partitions, 1)
-    part = -(-vocab // p)
-    if part * p != vocab:
-        table = jnp.pad(table, ((0, part * p - vocab), (0, 0)))
-    return table, part, p
+    part = lanes.sublane_pad(-(-vocab // p))
+    dim_pad = lanes.lane_pad(dim)
+    table = jnp.pad(table, ((0, part * p - vocab), (0, dim_pad - dim)))
+    return table, part, p, dim_pad
 
 
 def _pad_batch(idx, block_batch: int):
-    batch, _ = idx.shape
+    """Pad the batch axis to the block multiple and the nnz axis to the
+    lane tile (with -1 sentinels, which every kernel masks out)."""
+    batch, nnz = idx.shape
     bb = min(block_batch, _round_up(batch, 8))
     bp = _round_up(batch, bb)
-    idx = jnp.pad(idx, ((0, bp - batch), (0, 0)), constant_values=-1)
-    return idx, bb, bp
+    nnz_lane = lanes.lane_pad(nnz)
+    idx = jnp.pad(idx, ((0, bp - batch), (0, nnz_lane - nnz)),
+                  constant_values=-1)
+    return idx, bb, bp, nnz_lane
 
 
-def _gather_kernel(idx_ref, tbl_ref, rows_ref, *, part_rows: int):
+def _gather_kernel(idx_ref, tbl_ref, rows_ref, *, part_rows: int,
+                   nnz_sub: int):
     """One table-partition pass: write rows for in-partition indices."""
     p = pl.program_id(1)
     lo = p * part_rows
 
     @pl.when(p == 0)
     def _init():
-        rows_ref[...] = jnp.zeros_like(rows_ref)
+        rows_ref[...] = jnp.zeros(rows_ref.shape, rows_ref.dtype)
 
-    idx = idx_ref[...]  # (bb, nnz)
+    idx = idx_ref[...][:, :nnz_sub]  # (bb, nnz_sub)
     local = idx - lo
     inb = (local >= 0) & (local < part_rows) & (idx >= 0)
     safe = jnp.where(inb, local, 0)
-    tbl = tbl_ref[...]  # (part_rows, dim)
-    got = jnp.take(tbl, safe.reshape(-1), axis=0)
-    got = got.reshape(idx.shape + (tbl.shape[-1],))
+    tbl = tbl_ref[...]  # (part_rows, dim_pad)
+    got = jnp.take(tbl, safe, axis=0)  # (bb, nnz_sub, dim_pad), reshape-free
     rows_ref[...] = jnp.where(inb[..., None], got, rows_ref[...])
 
 
 def embedding_bag(table, indices, *, partitions: int = 1, block_batch: int = 128,
-                  interpret: bool = True):
+                  interpret: Optional[bool] = None):
     """out[b] = sum_k table[indices[b, k]];  indices == -1 contribute zero.
 
     table: [vocab, dim] float; indices: int32[batch, nnz].  ``vocab`` need
     not divide ``partitions`` — the last partition is zero-padded inside the
     wrapper.
     """
+    if interpret is None:
+        interpret = default_interpret()
     vocab, dim = table.shape
     batch, nnz = indices.shape
-    table, part, parts = _partitioned(table, partitions)
-    idx, bb, bp = _pad_batch(indices, block_batch)
+    nnz_sub = lanes.sublane_pad(nnz)
+    table, part, parts, dim_pad = _partitioned(table, partitions)
+    idx, bb, bp, nnz_lane = _pad_batch(indices, block_batch)
 
     rows = pl.pallas_call(
-        functools.partial(_gather_kernel, part_rows=part),
+        functools.partial(_gather_kernel, part_rows=part, nnz_sub=nnz_sub),
         grid=(bp // bb, parts),
         in_specs=[
-            pl.BlockSpec((bb, nnz), lambda b, p: (b, 0)),
-            pl.BlockSpec((part, dim), lambda b, p: (p, 0)),
+            pl.BlockSpec((bb, nnz_lane), lambda b, p: (b, 0)),
+            pl.BlockSpec((part, dim_pad), lambda b, p: (p, 0)),
         ],
-        out_specs=pl.BlockSpec((bb, nnz, dim), lambda b, p: (b, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((bp, nnz, dim), table.dtype),
+        out_specs=pl.BlockSpec((bb, nnz_sub, dim_pad), lambda b, p: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, nnz_sub, dim_pad), table.dtype),
         interpret=interpret,
     )(idx, table)
-    return _pool(rows, batch)
+    return _pool(rows, batch, nnz, dim)
 
 
-def _cache_gather_kernel(slot_ref, cache_ref, rows_ref, *, cache_rows: int):
+def _cache_gather_kernel(slot_ref, cache_ref, rows_ref, *, cache_rows: int,
+                         nnz_sub: int):
     """Single dense pass over the (VMEM-resident) cache: the hot path."""
-    slot = slot_ref[...]
+    slot = slot_ref[...][:, :nnz_sub]
     inb = (slot >= 0) & (slot < cache_rows)
     safe = jnp.where(inb, slot, 0)
     cache = cache_ref[...]
-    got = jnp.take(cache, safe.reshape(-1), axis=0)
-    got = got.reshape(slot.shape + (cache.shape[-1],))
+    got = jnp.take(cache, safe, axis=0)
     rows_ref[...] = jnp.where(inb[..., None], got, 0)
 
 
 def _two_level_kernel(slot_ref, cold_ref, cache_ref, tbl_ref, rows_ref, *,
-                      part_rows: int, cache_rows: int):
+                      part_rows: int, cache_rows: int, nnz_sub: int):
     """Grid dim 1: step 0 = cache pass, steps 1..P = table partition passes.
 
     Hot entries (slot >= 0) resolve from the cache and shadow any cold id;
@@ -140,32 +163,30 @@ def _two_level_kernel(slot_ref, cold_ref, cache_ref, tbl_ref, rows_ref, *,
 
     @pl.when(p == 0)
     def _cache_pass():
-        slot = slot_ref[...]
+        slot = slot_ref[...][:, :nnz_sub]
         inb = (slot >= 0) & (slot < cache_rows)
         safe = jnp.where(inb, slot, 0)
         cache = cache_ref[...]
-        got = jnp.take(cache, safe.reshape(-1), axis=0)
-        got = got.reshape(slot.shape + (cache.shape[-1],))
+        got = jnp.take(cache, safe, axis=0)
         rows_ref[...] = jnp.where(inb[..., None], got, 0)
 
     @pl.when(p > 0)
     def _table_pass():
         lo = (p - 1) * part_rows
-        cold = cold_ref[...]
+        cold = cold_ref[...][:, :nnz_sub]
         local = cold - lo
         # hot entries already resolved from the cache: slot wins over cold
         inb = ((local >= 0) & (local < part_rows) & (cold >= 0)
-               & (slot_ref[...] < 0))
+               & (slot_ref[...][:, :nnz_sub] < 0))
         safe = jnp.where(inb, local, 0)
         tbl = tbl_ref[...]
-        got = jnp.take(tbl, safe.reshape(-1), axis=0)
-        got = got.reshape(cold.shape + (tbl.shape[-1],))
+        got = jnp.take(tbl, safe, axis=0)
         rows_ref[...] = jnp.where(inb[..., None], got, rows_ref[...])
 
 
 def embedding_bag_cached(table, cache, slot_idx, cold_idx=None, *,
                          partitions: int = 1, block_batch: int = 128,
-                         interpret: bool = True):
+                         interpret: Optional[bool] = None):
     """Two-level cached embedding bag.
 
     out[b] = sum_k rows[b, k] with rows resolved per entry:
@@ -182,39 +203,46 @@ def embedding_bag_cached(table, cache, slot_idx, cold_idx=None, *,
     plan assigned them (the lookahead stage's invariant), the result is
     bit-identical to ``embedding_bag(table, original_indices)``.
     """
+    if interpret is None:
+        interpret = default_interpret()
     cache_rows, dim = cache.shape
     batch, nnz = slot_idx.shape
-    slot, bb, bp = _pad_batch(slot_idx, block_batch)
+    nnz_sub = lanes.sublane_pad(nnz)
+    dim_pad = lanes.lane_pad(dim)
+    rows_pad = lanes.sublane_pad(cache_rows)
+    cache = jnp.pad(cache, ((0, rows_pad - cache_rows), (0, dim_pad - dim)))
+    slot, bb, bp, nnz_lane = _pad_batch(slot_idx, block_batch)
 
     if cold_idx is None:
         rows = pl.pallas_call(
-            functools.partial(_cache_gather_kernel, cache_rows=cache_rows),
+            functools.partial(_cache_gather_kernel, cache_rows=cache_rows,
+                              nnz_sub=nnz_sub),
             grid=(bp // bb,),
             in_specs=[
-                pl.BlockSpec((bb, nnz), lambda b: (b, 0)),
-                pl.BlockSpec((cache_rows, dim), lambda b: (0, 0)),
+                pl.BlockSpec((bb, nnz_lane), lambda b: (b, 0)),
+                pl.BlockSpec((rows_pad, dim_pad), lambda b: (0, 0)),
             ],
-            out_specs=pl.BlockSpec((bb, nnz, dim), lambda b: (b, 0, 0)),
-            out_shape=jax.ShapeDtypeStruct((bp, nnz, dim), cache.dtype),
+            out_specs=pl.BlockSpec((bb, nnz_sub, dim_pad), lambda b: (b, 0, 0)),
+            out_shape=jax.ShapeDtypeStruct((bp, nnz_sub, dim_pad), cache.dtype),
             interpret=interpret,
         )(slot, cache)
-        return _pool(rows, batch)
+        return _pool(rows, batch, nnz, dim)
 
-    table, part, parts = _partitioned(table, partitions)
-    cold, _, _ = _pad_batch(cold_idx, block_batch)
+    table, part, parts, _ = _partitioned(table, partitions)
+    cold, _, _, _ = _pad_batch(cold_idx, block_batch)
     rows = pl.pallas_call(
         functools.partial(_two_level_kernel, part_rows=part,
-                          cache_rows=cache_rows),
+                          cache_rows=cache_rows, nnz_sub=nnz_sub),
         grid=(bp // bb, parts + 1),
         in_specs=[
-            pl.BlockSpec((bb, nnz), lambda b, p: (b, 0)),
-            pl.BlockSpec((bb, nnz), lambda b, p: (b, 0)),
-            pl.BlockSpec((cache_rows, dim), lambda b, p: (0, 0)),
-            pl.BlockSpec((part, dim),
+            pl.BlockSpec((bb, nnz_lane), lambda b, p: (b, 0)),
+            pl.BlockSpec((bb, nnz_lane), lambda b, p: (b, 0)),
+            pl.BlockSpec((rows_pad, dim_pad), lambda b, p: (0, 0)),
+            pl.BlockSpec((part, dim_pad),
                          lambda b, p: (jnp.maximum(p - 1, 0), 0)),
         ],
-        out_specs=pl.BlockSpec((bb, nnz, dim), lambda b, p: (b, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((bp, nnz, dim), cache.dtype),
+        out_specs=pl.BlockSpec((bb, nnz_sub, dim_pad), lambda b, p: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, nnz_sub, dim_pad), cache.dtype),
         interpret=interpret,
     )(slot, cold, cache, table)
-    return _pool(rows, batch)
+    return _pool(rows, batch, nnz, dim)

@@ -1,0 +1,97 @@
+"""Lane-alignment helpers shared by every Pallas kernel module.
+
+Mosaic (TPU) tiles vectors as (8 sublanes x 128 lanes); memory blocks whose
+minor dimension is not a multiple of 128 — or constructs like 1-D iota,
+lane-collapsing reshapes, and flat dynamic gathers — do not lower.  The
+kernels therefore share one vocabulary of lane-safe building blocks:
+
+- ``lane_pad`` / ``sublane_pad``: round widths up to the hardware tile.
+- ``lane_gather``: gather ``tbl[0, idx]`` for a 2-D index tile without any
+  1-D reshape: the table tile is broadcast across sublanes (bank by bank,
+  so the broadcast operand stays VMEM-bounded) and gathered along lanes
+  with ``take_along_axis`` — the shape Mosaic's dynamic-gather rule and
+  Triton's vectorized loads both accept.  Interpret mode evaluates the same
+  jnp ops, so both modes compute bit-identical values by construction.
+- ``onehot_lanes``: the in-kernel one-hot. The operator-level expression
+  (``operators.OneHot.jnp_expr``) collapses the depth axis with a reshape
+  that merges into the lane dimension — illegal under Mosaic — so the tile
+  codegen emits this per-column concat form instead: same values, lane
+  concatenation only, iota only in its 2-D broadcasted form.
+- ``gather_scratch_bytes``: the planner's VMEM account of one in-kernel
+  ``lane_gather`` (bank broadcast + gathered bank), used by the
+  compiled-mode legality pass (``mosaic-illegal`` fallback).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LANE = 128      # minor-dim tile of a TPU vreg
+SUBLANE = 8     # second-minor tile (float32/int32)
+
+# lanes per bank of the in-kernel table gather: bounds the broadcast
+# operand of lane_gather to (block_rows, GATHER_BANK) whatever the table
+# capacity, at the cost of one masked pass per bank
+GATHER_BANK = 2048
+
+
+def round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def lane_pad(w: int) -> int:
+    """Pad a width up to the lane tile (>= 1 lane group)."""
+    return round_up(max(int(w), 1), LANE)
+
+
+def sublane_pad(w: int) -> int:
+    """Pad a second-minor width up to the sublane tile."""
+    return round_up(max(int(w), 1), SUBLANE)
+
+
+def lane_gather(tbl, idx):
+    """``out[r, c] = tbl[0, idx[r, c]]`` with lane-aligned ops only.
+
+    ``tbl``: (1, C); ``idx``: int (rows, w), every entry in [0, C).
+    Each index hits exactly one bank, so the masked bank passes compose to
+    the exact gather (no accumulation, last write wins per element).
+    """
+    rows = idx.shape[0]
+    c = tbl.shape[-1]
+    if c <= GATHER_BANK:
+        bank = jnp.broadcast_to(tbl, (rows, c))
+        return jnp.take_along_axis(bank, idx, axis=1)
+    acc = jnp.zeros(idx.shape, tbl.dtype)
+    for b in range(0, c, GATHER_BANK):
+        bw = min(GATHER_BANK, c - b)
+        local = idx - b
+        inb = (local >= 0) & (local < bw)
+        safe = jnp.where(inb, local, 0)
+        bank = jnp.broadcast_to(tbl[:, b:b + bw], (rows, bw))
+        got = jnp.take_along_axis(bank, safe, axis=1)
+        acc = jnp.where(inb, got, acc)
+    return acc
+
+
+def gather_scratch_bytes(block_rows: int, capacity: int,
+                         itemsize: int = 4) -> int:
+    """VMEM bytes one in-kernel ``lane_gather`` holds live per tile: the
+    broadcast bank plus the gathered bank (the accumulator is the output
+    tile the working set already counts)."""
+    bank = min(lane_pad(capacity), GATHER_BANK)
+    return 2 * block_rows * bank * itemsize
+
+
+def onehot_lanes(x, depth: int):
+    """Lane-aligned one-hot of a 2-D int tile: (rows, w) -> (rows, w*depth).
+
+    Column layout matches ``operators.OneHot`` exactly
+    (``out[r, c*depth + j] = float(x[r, c] == j)``; out-of-range rows are
+    all-zero), but the expansion is a lane concat of per-column indicator
+    tiles instead of a trailing-axis reshape.
+    """
+    k = jax.lax.broadcasted_iota(jnp.int32, (1, depth), 1).astype(x.dtype)
+    cols = [(x[:, c:c + 1] == k).astype(jnp.float32)
+            for c in range(x.shape[1])]
+    return cols[0] if len(cols) == 1 else jnp.concatenate(cols, axis=1)

@@ -1,7 +1,11 @@
 """Jit'd public wrappers over the Pallas kernels.
 
-``interpret`` defaults to True on CPU (kernel bodies execute in Python for
-correctness validation) and False when a real TPU backend is present.
+``interpret=None`` on every wrapper resolves through
+``kernels.backend.default_interpret`` — compiled mode (interpret=False)
+whenever the default JAX backend has a compiled Pallas target (TPU/Mosaic,
+GPU/Triton), interpret mode otherwise.  The kernel modules apply the same
+default themselves; the wrappers resolve eagerly only so the jit static
+argnames see a concrete bool.
 """
 
 from __future__ import annotations
@@ -13,10 +17,14 @@ import jax
 from repro.kernels import dataflow as _dataflow
 from repro.kernels import embedding_bag as _bag
 from repro.kernels import vocab as _vocab
+from repro.kernels.backend import compiled_backend, default_interpret
 
-
-def default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+__all__ = [
+    "compiled_backend", "default_interpret",
+    "fused_stage", "output_dataflow", "group_dataflow", "fit_dataflow",
+    "vocab_build_chunk", "vocab_lookup", "packer",
+    "embedding_bag", "embedding_bag_cached",
+]
 
 
 def fused_stage(chain_fn, *, in_dtype, out_dtype, hex_width=0,
@@ -50,13 +58,14 @@ def group_dataflow(inputs, tables, steps, outputs, *,
 
 
 def fit_dataflow(inputs, steps, value_buf, capacity, *,
-                 block_rows=256, interpret=None):
+                 partitions=1, block_rows=256, interpret=None):
     """One VocabFit's full fit chunk (decode + bound + first-pos/count
-    build) as a single Pallas kernel."""
+    build) as a single Pallas kernel.  ``partitions`` splits the accumulator
+    table across the grid (the vocab-build HBM-bank pattern)."""
     if interpret is None:
         interpret = default_interpret()
     return jax.jit(_dataflow.make_fit_dataflow(
-        inputs, steps, value_buf, capacity,
+        inputs, steps, value_buf, capacity, partitions=partitions,
         block_rows=block_rows, interpret=interpret))
 
 

@@ -14,16 +14,29 @@ VocabMap — keyed lookups against the frozen table.  Partition-parallel form:
 each grid step gathers hits for its table partition; a max-combine across
 partitions assembles the result (every key hits exactly one partition, misses
 contribute -1).  This avoids unsupported full-table dynamic gathers when the
-table exceeds VMEM.
+table exceeds VMEM; the in-partition gather is the banked lane gather of
+``kernels.lanes`` (no flat reshapes — the form Mosaic lowers).
+
+Partition blocks are lane-padded: each partition of ``capacity``
+occupies ``lane_pad(capacity // partitions)`` lanes of the kernel-side
+buffer (padding lanes are inert — bounds checks use the logical partition
+size) and the wrappers re-interleave the logical table on return, so any
+``capacity % 128`` works in compiled mode.
+
+``interpret=None`` resolves through ``kernels.backend.default_interpret``.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import lanes
+from repro.kernels.backend import default_interpret
 
 ABSENT32 = 2 ** 31 - 1  # python int: safe to close over inside kernel bodies
 
@@ -32,18 +45,25 @@ def _round_up(x: int, m: int) -> int:
     return -(-x // m) * m
 
 
+def _unpad_partitions(t, partitions: int, part: int, part_pad: int):
+    """(1, partitions*part_pad) kernel buffer -> logical [capacity] table."""
+    t = t.reshape(partitions, part_pad)[:, :part].reshape(-1)
+    return t
+
+
 # ---------------------------------------------------------------------------
 # VocabGen: chunk-local first-occurrence build
 # ---------------------------------------------------------------------------
 
 def _build_kernel(vals_ref, fp_ref, *, part_size: int, n_vals: int):
-    """Grid dim 0 = table partition p. fp_ref block: partition of first_pos."""
+    """Grid dim 0 = table partition p. fp_ref block: partition of first_pos
+    (lane-padded; only the first ``part_size`` lanes are logical)."""
     p = pl.program_id(0)
     lo = p * part_size
 
     @pl.when(pl.program_id(1) == 0)
     def _init():
-        fp_ref[...] = jnp.full_like(fp_ref, ABSENT32)
+        fp_ref[...] = jnp.full(fp_ref.shape, ABSENT32, fp_ref.dtype)
 
     vals = vals_ref[...]  # (1, chunk) int32 block of the stream
     chunk = vals.shape[-1]
@@ -64,15 +84,19 @@ def _build_kernel(vals_ref, fp_ref, *, part_size: int, n_vals: int):
 
 
 def vocab_build_chunk(values, capacity: int, *, partitions: int = 1,
-                      stream_block: int = 4096, interpret: bool = True):
+                      stream_block: int = 4096,
+                      interpret: Optional[bool] = None):
     """First-occurrence position within one chunk. int32[capacity], ABSENT32=absent.
 
     values: int32[n] in [0, capacity).
     """
+    if interpret is None:
+        interpret = default_interpret()
     n = int(values.shape[0])
     if capacity % max(partitions, 1):
         raise ValueError("capacity must divide evenly into partitions")
     part = capacity // partitions
+    part_pad = lanes.lane_pad(part)
     nb = _round_up(max(n, 1), stream_block)
     vp = jnp.pad(values, (0, nb - n), constant_values=-1).reshape(1, nb)
 
@@ -80,11 +104,11 @@ def vocab_build_chunk(values, capacity: int, *, partitions: int = 1,
         functools.partial(_build_kernel, part_size=part, n_vals=n),
         grid=(partitions, nb // stream_block),
         in_specs=[pl.BlockSpec((1, stream_block), lambda p, c: (0, c))],
-        out_specs=pl.BlockSpec((1, part), lambda p, c: (0, p)),
-        out_shape=jax.ShapeDtypeStruct((1, capacity), jnp.int32),
+        out_specs=pl.BlockSpec((1, part_pad), lambda p, c: (0, p)),
+        out_shape=jax.ShapeDtypeStruct((1, partitions * part_pad), jnp.int32),
         interpret=interpret,
     )(vp)
-    return out[0]
+    return _unpad_partitions(out, partitions, part, part_pad)
 
 
 # ---------------------------------------------------------------------------
@@ -99,40 +123,44 @@ def _lookup_kernel(x_ref, tbl_ref, o_ref, *, part_size: int):
 
     @pl.when(p == 0)
     def _init():
-        o_ref[...] = jnp.full_like(o_ref, -1)
+        o_ref[...] = jnp.full(o_ref.shape, -1, o_ref.dtype)
 
     local = x - lo
     inb = (local >= 0) & (local < part_size)
     safe = jnp.where(inb, local, 0)
-    tbl = tbl_ref[...]  # (1, part_size)
-    got = jnp.take(tbl[0], safe.reshape(-1), axis=0).reshape(x.shape)
+    tbl = tbl_ref[...]  # (1, lane_pad(part_size))
+    got = lanes.lane_gather(tbl, safe)
     got = jnp.where(inb, got, -1)
     o_ref[...] = jnp.maximum(o_ref[...], got)
 
 
 def vocab_lookup(x, table, n_unique, *, partitions: int = 1,
-                 block_rows: int = 256, interpret: bool = True):
+                 block_rows: int = 256, interpret: Optional[bool] = None):
     """Map x through table (absent -> -1 -> OOV index n_unique).
 
     x: int32[rows, cols] in [0, capacity); table: int32[capacity].
     """
+    if interpret is None:
+        interpret = default_interpret()
     rows, cols = x.shape
     capacity = int(table.shape[0])
     if capacity % max(partitions, 1):
         raise ValueError("capacity must divide evenly into partitions")
     part = capacity // partitions
+    part_pad = lanes.lane_pad(part)
     br = min(block_rows, _round_up(rows, 8))
     bc = _round_up(cols, 128)
     rp = _round_up(rows, br)
     xp = jnp.pad(x, ((0, rp - rows), (0, bc - cols)))
-    tbl = table.reshape(1, capacity)
+    tbl = jnp.pad(table.reshape(partitions, part),
+                  ((0, 0), (0, part_pad - part))).reshape(1, -1)
 
     out = pl.pallas_call(
         functools.partial(_lookup_kernel, part_size=part),
         grid=(rp // br, partitions),
         in_specs=[
             pl.BlockSpec((br, bc), lambda r, p: (r, 0)),
-            pl.BlockSpec((1, part), lambda r, p: (0, p)),
+            pl.BlockSpec((1, part_pad), lambda r, p: (0, p)),
         ],
         out_specs=pl.BlockSpec((br, bc), lambda r, p: (r, 0)),
         out_shape=jax.ShapeDtypeStruct((rp, bc), jnp.int32),

@@ -90,12 +90,10 @@ def forward(params, batch, cfg: DLRMConfig):
         # backward pass scatter-adds into the tables at the ORIGINAL ids,
         # so gradients match the uncached lookup exactly
         from repro.etl_runtime.lookahead import cached_embedding_lookup
-        from repro.kernels.ops import default_interpret
         emb = cached_embedding_lookup(
             tables, batch["emb_cache"][:cfg.n_sparse],
             batch["emb_slot"][:, :cfg.n_sparse],
-            batch["emb_cold"][:, :cfg.n_sparse], sparse,
-            interpret=default_interpret())
+            batch["emb_cold"][:, :cfg.n_sparse], sparse)
     else:
         # per-feature single-hot lookup from stacked tables: (B, F, d)
         emb = jax.vmap(lambda tbl, idx: jnp.take(tbl, idx, axis=0),

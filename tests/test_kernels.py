@@ -51,11 +51,12 @@ def test_vocab_build_sweep(cap, parts, n):
 
 @pytest.mark.parametrize("rows,width,cap", [(8, 3, 64), (100, 7, 128),
                                             (257, 1, 32)])
-def test_fit_dataflow_matches_staged_build(rows, width, cap):
+@pytest.mark.parametrize("partitions", [1, 4])
+def test_fit_dataflow_matches_staged_build(rows, width, cap, partitions):
     """Fused fit kernel == staged build kernel + counts oracle, including
     out-of-range values: negatives and >= capacity drop on both paths
     (regression: JAX scatter index normalization must not wrap -1 to the
-    last table slot)."""
+    last table slot).  Partitioned accumulators agree with partitions=1."""
     from repro.kernels.dataflow import StreamInput, make_fit_dataflow
 
     vals = RNG.integers(0, cap, size=(rows, width)).astype(np.int32)
@@ -63,7 +64,8 @@ def test_fit_dataflow_matches_staged_build(rows, width, cap):
     if vals.size > 3:
         vals.reshape(-1)[1] = cap + 5                      # overflow id
     fn = make_fit_dataflow([StreamInput("v", width, np.dtype(np.int32))],
-                           [], "v", cap, interpret=True)
+                           [], "v", cap, partitions=partitions,
+                           interpret=True)
     got_fp, got_cnt = (np.asarray(a) for a in fn(jnp.asarray(vals)))
     flat = vals.reshape(-1)
     want_fp = np.full(cap, 2 ** 31 - 1, np.int32)
