@@ -27,17 +27,31 @@ should rise with credits while ETL is the bottleneck (ratio > 1) and
 saturate near 100% once ETL hides (ratio <= 1, credits >= 2).
 ``--sweep-credits`` / ``--sweep-ratios`` override the grid (the nightly CI
 smoke runs a single cell).
+
+``--autotune`` (with ``--sweep``) adds one controller-driven cell per
+ratio: the same pinned-cost workload starts at credits=1 and lets the
+self-tuning ``PipelineController`` pick the staging depth live —
+
+  fig8_sweep/autotuned_ratio=R
+
+the row reports the knobs the controller landed on, for eyeballing
+against the exhaustively-swept cells.  ``--json [PATH]`` writes the
+machine-readable sweep trajectory (default ``BENCH_10.json`` at the repo
+root) with every record stamped with the git SHA and the resolved
+interpret mode, so hardware and interpret baselines never get compared.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import time
 
 import jax
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, git_sha
 from repro.configs.base import TrainConfig
 from repro.core.pipeline import paper_pipeline
 from repro.data.source import Source
@@ -99,38 +113,71 @@ def run_overlapped(job, step, state):
     return train_s / total, total, job.stats()
 
 
-def run_sweep(credits_list, ratios, steps):
+def _sweep_cell(job, steps, train_s):
+    """Run one pinned-cost cell; return (wall_s, util, stats)."""
+    t0 = time.perf_counter()
+    train_total = 0.0
+    with job.batches() as ex:
+        for _ in ex:
+            ts = time.perf_counter()
+            time.sleep(train_s)
+            train_total += time.perf_counter() - ts
+    wall = time.perf_counter() - t0
+    return wall, job.stats().trainer_utilization(train_total), job.stats()
+
+
+def run_sweep(credits_list, ratios, steps, *, autotune=False):
     """Credits x stage-cost-ratio sensitivity sweep (Fig-8, ROADMAP item).
 
     Stage costs are pinned sleeps (deterministic, hardware-independent):
     the transform stage costs ``ratio`` x the train step.  Each cell runs
     the real staged executor through the ``EtlJob`` facade and reports the
     trainer's utilization = train_time / (train_time + starvation).
+
+    With ``autotune``, one extra cell per ratio starts at credits=1 and
+    lets the PipelineController choose the staging depth from measured
+    windows — the controller-chosen row of the grid.  Returns the
+    machine-readable record list (one dict per cell).
     """
     train_s = 0.004
+    records = []
+
+    def make_job(credits, ratio, **kw):
+        etl_s = train_s * ratio
+
+        def transform(raw, _etl_s=etl_s):
+            time.sleep(_etl_s)
+            return raw
+
+        src = Source.stream(lambda: iter([{"i": np.arange(8)}] * steps))
+        return EtlJob(transform, src, credits=credits, **kw)
+
     for credits in credits_list:
         for ratio in ratios:
-            etl_s = train_s * ratio
-
-            def transform(raw, _etl_s=etl_s):
-                time.sleep(_etl_s)
-                return raw
-
-            src = Source.stream(
-                lambda: iter([{"i": np.arange(8)}] * steps))
-            job = EtlJob(transform, src, credits=credits,
-                         name=f"sweep-c{credits}-r{ratio}")
-            t0 = time.perf_counter()
-            train_total = 0.0
-            with job.batches() as ex:
-                for _ in ex:
-                    ts = time.perf_counter()
-                    time.sleep(train_s)
-                    train_total += time.perf_counter() - ts
-            wall = time.perf_counter() - t0
-            util = job.stats().trainer_utilization(train_total)
+            job = make_job(credits, ratio, name=f"sweep-c{credits}-r{ratio}")
+            wall, util, stats = _sweep_cell(job, steps, train_s)
             emit(f"fig8_sweep/credits={credits}_ratio={ratio:g}", wall,
-                 f"util={util:.2%}|starved={job.stats().consumer_wait_s:.3f}s")
+                 f"util={util:.2%}|starved={stats.consumer_wait_s:.3f}s")
+            records.append(dict(mode="sweep", credits=credits, ratio=ratio,
+                                steps=steps, wall_s=wall, util=util,
+                                starved_s=stats.consumer_wait_s))
+    if autotune:
+        for ratio in ratios:
+            job = make_job(1, ratio, autotune=True,
+                           max_credits=max(credits_list),
+                           name=f"sweep-autotuned-r{ratio}")
+            wall, util, stats = _sweep_cell(job, steps, train_s)
+            ctl = stats.controller
+            chosen = ctl.knob_values() if ctl is not None else {}
+            decisions = ctl.decision_counts() if ctl is not None else {}
+            emit(f"fig8_sweep/autotuned_ratio={ratio:g}", wall,
+                 f"util={util:.2%}|chosen="
+                 + ",".join(f"{k}={v}" for k, v in sorted(chosen.items())))
+            records.append(dict(mode="autotuned", ratio=ratio, steps=steps,
+                                wall_s=wall, util=util,
+                                starved_s=stats.consumer_wait_s,
+                                chosen=chosen, decisions=decisions))
+    return records
 
 
 def _csv(kind):
@@ -148,10 +195,34 @@ def main(argv=None):
     ap.add_argument("--sweep-ratios", type=_csv(float),
                     default=[0.5, 1.0, 2.0],
                     help="comma-separated ETL/train cost ratios for --sweep")
+    ap.add_argument("--autotune", action="store_true",
+                    help="with --sweep: add a controller-chosen cell per "
+                         "ratio (self-tuning PipelineController)")
+    ap.add_argument("--json", nargs="?", const="", default=None,
+                    metavar="PATH",
+                    help="with --sweep: write the machine-readable records "
+                         "(default: BENCH_10.json at the repo root)")
     args = ap.parse_args(argv)
     n = args.steps
     if args.sweep:
-        run_sweep(args.sweep_credits, args.sweep_ratios, n)
+        records = run_sweep(args.sweep_credits, args.sweep_ratios, n,
+                            autotune=args.autotune)
+        if args.json is not None:
+            from repro.kernels.ops import default_interpret
+            sha, interpret = git_sha(), default_interpret()
+            for r in records:
+                r["git_sha"] = sha
+                r["interpret"] = interpret
+            path = pathlib.Path(args.json) if args.json else (
+                pathlib.Path(__file__).resolve().parent.parent
+                / "BENCH_10.json")
+            path.write_text(json.dumps({
+                "bench": "overlap_sweep",
+                "git_sha": sha,
+                "interpret": interpret,
+                "records": records,
+            }, indent=2) + "\n")
+            print(f"wrote {path}", flush=True)
         return
 
     cfg = dlrm.DLRMConfig(vocab_size=8193, d_emb=32, bot_mlp=(128, 64, 32),

@@ -164,8 +164,19 @@ class CompiledPipeline:
                  fuse: str = "auto", optimize: str = "auto", semantics=None):
         if backend not in ("numpy", "jnp", "pallas"):
             raise ValueError(f"unknown backend {backend!r}")
-        if fuse not in ("auto", "off"):
+        # fuse: "auto" / "off", or a per-output spec — a set/sequence of
+        # output names to force STAGED (the controller's per-output fuse
+        # knob), or a {output: bool} dict (False = staged)
+        fuse_off: frozenset = frozenset()
+        if isinstance(fuse, dict):
+            fuse_off = frozenset(k for k, v in fuse.items() if not v)
+            fuse = "auto"
+        elif isinstance(fuse, (set, frozenset, list, tuple)):
+            fuse_off = frozenset(fuse)
+            fuse = "auto"
+        elif fuse not in ("auto", "off"):
             raise ValueError(f"unknown fuse mode {fuse!r}")
+        self._fuse_off = fuse_off
         if optimize not in ("auto", "off"):
             raise ValueError(f"unknown optimize mode {optimize!r}")
         # resolve the ONE interpret flag first: fusion legality depends on it
@@ -209,7 +220,8 @@ class CompiledPipeline:
         self._grouped_outputs: dict[str, int] = {}
         if backend == "pallas" and fuse == "auto":
             self._fused_programs = {dp.output: dp for dp in plan.dataflows
-                                    if dp.legal}
+                                    if dp.legal
+                                    and dp.output not in self._fuse_off}
             self._fused_fit_programs = {fp.vocab_id: fp
                                         for fp in plan.fit_dataflows
                                         if fp.legal}
@@ -236,6 +248,47 @@ class CompiledPipeline:
             self._apply_jit = jax.jit(self._apply_fn)
             self._fit_chunk_fn = self._build_fit_chunk()
             self._fit_chunk_jit = jax.jit(self._fit_chunk_fn)
+
+    # ------------------------------------------------------------------
+    # knob recompilation (the controller's row_tile / fuse actuator)
+    # ------------------------------------------------------------------
+
+    def fuse_spec(self):
+        """The current fuse setting in ``with_knobs``-compatible form:
+        ``"off"``, ``"auto"``, or the frozenset of staged-forced outputs."""
+        if self.fuse == "off":
+            return "off"
+        return frozenset(self._fuse_off) if self._fuse_off else "auto"
+
+    def with_knobs(self, *, row_tile: Optional[int] = None, fuse=None):
+        """Recompile this pipeline at new knob settings, SHARING vocabulary
+        state with the original.
+
+        ``row_tile`` retiles every fused kernel (legality is re-judged at
+        the new tile — a tile that no longer fits the VMEM budget falls
+        back staged, never crashes); ``fuse`` takes the same forms as the
+        constructor ("auto"/"off"/per-output spec).  Omitted knobs keep
+        their current values.  The returned pipeline aliases ``self.state``
+        — tables fitted on either are visible to both, so a mid-run swap
+        (``StreamingExecutor.swap_pipeline``) is bit-identical to a fresh
+        compile at the same settings (pinned by tests/test_controller.py).
+        """
+        new_tile = (self.plan.row_tile if row_tile is None
+                    else max(1, int(row_tile)))
+        new_fuse = self.fuse_spec() if fuse is None else fuse
+        # re-judge all fusion programs from scratch at the new tile; the
+        # constructor re-resolves compiled-mode legality (and re-optimizes)
+        # exactly as a fresh compile would
+        plan = dataclasses.replace(
+            self.plan, dataflows=[], fit_dataflows=[], groups=[],
+            opt_info={}, compiled_mode=False, row_tile=new_tile)
+        build_plan_programs(plan)
+        new = CompiledPipeline(plan, self.graph, self.backend,
+                               interpret=self.interpret, name=self.name,
+                               fuse=new_fuse, optimize=self.optimize,
+                               semantics=self.semantics)
+        new.state = self.state
+        return new
 
     # ------------------------------------------------------------------
     # source assembly: raw columnar batch -> source buffers
@@ -359,6 +412,7 @@ class CompiledPipeline:
         terminals = [(b, plan.buffers[b].width) for b in po.buffers]
         return kops.output_dataflow(inputs, tables, steps, terminals,
                                     po.dtype, pad_cols_to=po.pad_cols_to,
+                                    block_rows=plan.row_tile,
                                     interpret=self.interpret)
 
     def _dataflow_steps(self, stage_ids, vocab_ids):
@@ -392,6 +446,7 @@ class CompiledPipeline:
                 name, tuple((b, plan.buffers[b].width) for b in po.buffers),
                 po.dtype, po.pad_cols_to))
         return kops.group_dataflow(inputs, tables, steps, outs,
+                                   block_rows=plan.row_tile,
                                    interpret=self.interpret)
 
     def _tile_steps(self, stage_ids) -> list[TileStep]:
@@ -430,6 +485,7 @@ class CompiledPipeline:
         partitions = max(1, -(-fp.capacity // 65536))
         return kops.fit_dataflow(inputs, steps, fp.in_buf, fp.capacity,
                                  partitions=partitions,
+                                 block_rows=plan.row_tile,
                                  interpret=self.interpret)
 
     def _build_apply(self) -> Callable:
@@ -461,6 +517,7 @@ class CompiledPipeline:
                 dts = [plan.buffers[b].dtype for b in po.buffers]
                 packers[po.name] = kops.packer(
                     widths, dts, po.dtype, pad_cols_to=po.pad_cols_to,
+                    block_rows=plan.row_tile,
                     interpret=self.interpret)
 
         def apply_fn(tables, n_uniques, resolved, cols):

@@ -94,15 +94,23 @@ class Pipeline:
 
     def compile(self, backend: str = "jnp", *, interpret: Optional[bool] = None,
                 vmem_budget: int = 4 << 20, lanes: int = 8,
-                vector_width: int = 128, fuse: str = "auto",
-                optimize: str = "auto") -> CompiledPipeline:
+                vector_width: int = 128, fuse="auto",
+                optimize: str = "auto",
+                row_tile: Optional[int] = None) -> CompiledPipeline:
         """Lower the DAG.  ``optimize="auto"`` runs the relational optimizer
         (cross-output CSE, dead-stage pushdown, multi-output grouping) over
         the plan first; ``optimize="off"`` compiles the planner's plan
         verbatim — outputs are bit-identical either way.  ``fuse="auto"``
         (pallas backend) lowers each ``DataflowGroup`` / legal output to a
         single streaming dataflow kernel; ``fuse="off"`` forces the
-        stage-at-a-time lowering (the measurable baseline).
+        stage-at-a-time lowering (the measurable baseline); a set or
+        ``{output: bool}`` dict forces just those outputs staged (the
+        controller's per-output fuse knob).
+
+        ``row_tile`` sets the fused kernels' row-tile granularity (default
+        ``planner.DATAFLOW_BLOCK_ROWS``); legality is judged at that tile,
+        and ``CompiledPipeline.with_knobs`` retunes it later without
+        refitting.
 
         ``interpret=None`` (default) resolves by backend capability
         (``kernels.backend.default_interpret``): compiled Pallas on
@@ -111,8 +119,9 @@ class Pipeline:
         produce bit-identical outputs."""
         if not self._outputs:
             raise ValueError("pipeline has no outputs; call .output(...)")
+        planner_kw = {} if row_tile is None else {"row_tile": row_tile}
         planner = Planner(self.graph, vmem_budget=vmem_budget, lanes=lanes,
-                          vector_width=vector_width)
+                          vector_width=vector_width, **planner_kw)
         plan = planner.plan(self._outputs)
         return CompiledPipeline(plan, self.graph, backend,
                                 interpret=interpret, name=self.name,

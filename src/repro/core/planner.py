@@ -227,6 +227,12 @@ class ExecutionPlan:
     # recorded here so the optimizer re-checks merged slices with the same
     # budget the planner checked per-output slices with
     dataflow_vmem_budget: int = 0
+    # row-tile granularity of the fused dataflow kernels.  A tunable knob
+    # (the controller's ``row_tile``): every legality pass and every kernel
+    # builder reads it, so re-planning at a new tile re-judges legality —
+    # bigger tiles amortize grid overhead but can push a slice over the
+    # VMEM budget and back to the staged path
+    row_tile: int = DATAFLOW_BLOCK_ROWS
     # whether the legality passes judged slices for the *compiled* Pallas
     # lowering (lane-padded blocks + banked-gather scratch on top of the
     # logical working set) rather than interpret mode; set through
@@ -347,11 +353,13 @@ class ExecutionPlan:
 class Planner:
     def __init__(self, graph: Graph, *, vmem_budget: int = VMEM_TABLE_BUDGET,
                  lanes: int = 8, vector_width: int = 128,
-                 dataflow_vmem_budget: Optional[int] = None):
+                 dataflow_vmem_budget: Optional[int] = None,
+                 row_tile: int = DATAFLOW_BLOCK_ROWS):
         self.graph = graph
         self.vmem_budget = vmem_budget
         self.lanes = lanes
         self.vector_width = vector_width
+        self.row_tile = max(1, int(row_tile))
         # Fused-kernel per-tile working-set bound (stream tiles +
         # intermediates + tables + output tile, double-buffered).  It tracks
         # the user's declared VMEM headroom: tables (each <= vmem_budget by
@@ -466,7 +474,8 @@ class Planner:
                              vocab_fits=vocab_fits, pack=pack,
                              source_buffers=source_buffers,
                              source_columns=source_columns,
-                             dataflow_vmem_budget=self.dataflow_vmem_budget)
+                             dataflow_vmem_budget=self.dataflow_vmem_budget,
+                             row_tile=self.row_tile)
         build_plan_programs(plan)
         return plan
 
@@ -515,29 +524,39 @@ def slice_sources(stages, terminals) -> list[str]:
 
 
 def stream_tile_bytes(plan: ExecutionPlan, stages, sources,
-                      *, block_rows: int = DATAFLOW_BLOCK_ROWS) -> int:
-    """VMEM bytes of one row tile of every buffer a slice touches."""
+                      *, block_rows: Optional[int] = None) -> int:
+    """VMEM bytes of one row tile of every buffer a slice touches.
+
+    ``block_rows`` defaults to ``plan.row_tile`` (as do the other sizing
+    helpers below), so legality is always judged at the tile the kernels
+    will actually run."""
+    if block_rows is None:
+        block_rows = plan.row_tile
     produced = {s.out_buf for s in stages}
     return sum(block_rows * plan.buffers[b].bytes_per_row
                for b in set(sources) | produced)
 
 
 def packed_output_bytes(plan: ExecutionPlan, po: PackOutput,
-                        *, block_rows: int = DATAFLOW_BLOCK_ROWS) -> int:
+                        *, block_rows: Optional[int] = None) -> int:
     """VMEM bytes of one packed output tile (width padded per the layout)."""
+    if block_rows is None:
+        block_rows = plan.row_tile
     out_w = sum(plan.buffers[b].width for b in po.buffers)
     padded_w = -(-out_w // po.pad_cols_to) * po.pad_cols_to
     return block_rows * padded_w * po.dtype.itemsize
 
 
 def compiled_extra_bytes(plan: ExecutionPlan, stages, sources,
-                         *, block_rows: int = DATAFLOW_BLOCK_ROWS) -> int:
+                         *, block_rows: Optional[int] = None) -> int:
     """Extra per-tile VMEM the *compiled* (Mosaic/Triton) lowering holds on
     top of the logical working set: lane-padding on every streamed buffer
     tile and table, plus the banked-gather scratch each in-kernel lookup
     materializes (``lanes.lane_gather`` broadcasts one bank per pass).
     Interpret mode streams the logical widths, so this is zero there.
     """
+    if block_rows is None:
+        block_rows = plan.row_tile
     produced = {s.out_buf for s in stages}
     pad = 0
     for b in set(sources) | produced:
@@ -552,7 +571,7 @@ def compiled_extra_bytes(plan: ExecutionPlan, stages, sources,
 
 
 def build_dataflow_program(plan: ExecutionPlan, po: PackOutput,
-                           *, block_rows: int = DATAFLOW_BLOCK_ROWS,
+                           *, block_rows: Optional[int] = None,
                            compiled: Optional[bool] = None
                            ) -> DataflowProgram:
     """Backward-slice the stages feeding ``po`` and check legality.
@@ -573,6 +592,8 @@ def build_dataflow_program(plan: ExecutionPlan, po: PackOutput,
     """
     if compiled is None:
         compiled = plan.compiled_mode
+    if block_rows is None:
+        block_rows = plan.row_tile
     stage_ids = plan.output_slice(po)
     stages = [plan.stage_by_id(sid) for sid in stage_ids]
     sources = slice_sources(stages, po.buffers)
@@ -623,7 +644,7 @@ def build_dataflow_program(plan: ExecutionPlan, po: PackOutput,
 
 
 def build_fit_program(plan: ExecutionPlan, vf: VocabFit,
-                      *, block_rows: int = DATAFLOW_BLOCK_ROWS,
+                      *, block_rows: Optional[int] = None,
                       compiled: Optional[bool] = None) -> FitProgram:
     """Backward-slice the stages feeding ``vf`` and check fit legality.
 
@@ -642,6 +663,8 @@ def build_fit_program(plan: ExecutionPlan, vf: VocabFit,
     """
     if compiled is None:
         compiled = plan.compiled_mode
+    if block_rows is None:
+        block_rows = plan.row_tile
     stage_ids = plan.fit_slice(vf)
     stages = [plan.stage_by_id(sid) for sid in stage_ids]
     sources = slice_sources(stages, [vf.in_buf])

@@ -50,7 +50,6 @@ from __future__ import annotations
 import collections
 import dataclasses
 import threading
-import time
 from dataclasses import replace
 from typing import Callable, Optional
 
@@ -314,8 +313,10 @@ class LookaheadStage(threading.Thread):
                  cache_stats: Optional[CacheStats] = None,
                  drop_oldest: bool = False,
                  on_put: Optional[Callable[[int], None]] = None,
-                 on_error: Optional[Callable[[BaseException], None]] = None):
+                 on_error: Optional[Callable[[BaseException], None]] = None,
+                 clock=None):
         super().__init__(name=f"etl-{stats.name}", daemon=True)
+        from repro.etl_runtime.clock import SYSTEM_CLOCK
         self.stats = stats
         self.in_q = in_q
         self.out_q = out_q
@@ -327,7 +328,17 @@ class LookaheadStage(threading.Thread):
         self.drop_oldest = drop_oldest
         self.on_put = on_put
         self.on_error = on_error
+        self._clock = clock or SYSTEM_CLOCK
         self._buf: collections.deque = collections.deque()
+        # live window knob (the controller's lookahead_window actuator);
+        # frequency counts always cover the in-flight buffer whatever the
+        # current target, so shrinking mid-run just drains the excess
+        self._window = max(1, cfg.window)
+
+    def set_window(self, window: int) -> None:
+        """Retarget the lookahead depth W; takes effect on the next batch
+        (a shrink releases the now-excess envelopes then)."""
+        self._window = max(1, int(window))
 
     def _indices(self, payload) -> np.ndarray:
         idx = np.asarray(payload[self.cfg.key])
@@ -344,10 +355,11 @@ class LookaheadStage(threading.Thread):
         _, plan = self.planner.pop_plan()
         payload = dict(env.payload)
         payload.update(plan.as_payload())
-        t0 = time.perf_counter()
+        mono = self._clock.monotonic
+        t0 = mono()
         r = self.out_q.put(replace(env, payload=payload),
                            drop_oldest=self.drop_oldest)
-        self.stats.wait_out_s += time.perf_counter() - t0
+        self.stats.wait_out_s += mono() - t0
         from repro.etl_runtime.runtime import _STOPPED
         if r is _STOPPED:
             return False
@@ -359,23 +371,23 @@ class LookaheadStage(threading.Thread):
 
     def run(self):
         from repro.etl_runtime.runtime import _EOS, _STOPPED
-        window = max(1, self.cfg.window)
+        mono = self._clock.monotonic
         while True:
-            t0 = time.perf_counter()
+            t0 = mono()
             item = self.in_q.get()
-            self.stats.wait_in_s += time.perf_counter() - t0
+            self.stats.wait_in_s += mono() - t0
             if item is _STOPPED:
                 return
             if item is _EOS:
                 while self._buf:
-                    t1 = time.perf_counter()
+                    t1 = mono()
                     ok = self._release()
-                    self.stats.busy_s += time.perf_counter() - t1
+                    self.stats.busy_s += mono() - t1
                     if not ok:
                         return
                 self.out_q.put(_EOS)
                 return
-            t1 = time.perf_counter()
+            t1 = mono()
             try:
                 idx = self._indices(item.payload)
                 if self.planner is None:
@@ -383,12 +395,16 @@ class LookaheadStage(threading.Thread):
                         self.cfg, idx.shape[1], stats=self.cache_stats)
                 self.planner.push(idx)
                 self._buf.append(item)
-                ok = len(self._buf) < window or self._release()
+                ok = True
+                # drain to the live window target (shrunk knobs release the
+                # excess; at steady state this pops exactly one per push)
+                while ok and len(self._buf) >= self._window:
+                    ok = self._release()
             except Exception as e:
                 if self.on_error:
                     self.on_error(e)
                 return
-            self.stats.busy_s += time.perf_counter() - t1
+            self.stats.busy_s += mono() - t1
             if not ok:
                 return
 

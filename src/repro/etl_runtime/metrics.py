@@ -122,6 +122,38 @@ def stats_to_prometheus(stats: RuntimeStats, *, prefix: str = "repro_etl",
         metric = f"{prefix}_embed_cache_hit_rate"
         lines.append(f"# TYPE {metric} gauge")
         lines.append(f"{metric}{_fmt_labels(base)} {cache.hit_rate():.9g}")
+
+    # self-tuning controller: live knob values + decision counts (present
+    # when the executor ran with autotune / adaptive credits)
+    knobs = getattr(stats, "knobs", None)
+    if knobs:
+        num_knobs = {k: v for k, v in knobs.items()
+                     if isinstance(v, (bool, int, float))}
+        if num_knobs:
+            metric = f"{prefix}_controller_knob"
+            lines.append(f"# TYPE {metric} gauge")
+            for k in sorted(num_knobs):
+                lbl = _fmt_labels({**base, "knob": k})
+                lines.append(f"{metric}{lbl} {float(num_knobs[k]):.9g}")
+        str_knobs = {k: v for k, v in knobs.items() if k not in num_knobs}
+        if str_knobs:
+            metric = f"{prefix}_controller_knob_info"
+            lines.append(f"# TYPE {metric} gauge")
+            for k in sorted(str_knobs):
+                lbl = _fmt_labels({**base, "knob": k,
+                                   "value": str(str_knobs[k])})
+                lines.append(f"{metric}{lbl} 1")
+    controller = getattr(stats, "controller", None)
+    if controller is not None:
+        metric = f"{prefix}_controller_decisions_total"
+        lines.append(f"# TYPE {metric} counter")
+        for action, n in sorted(controller.decision_counts().items()):
+            lbl = _fmt_labels({**base, "action": action})
+            lines.append(f"{metric}{lbl} {n}")
+        metric = f"{prefix}_controller_queued_bytes_estimate"
+        lines.append(f"# TYPE {metric} gauge")
+        lines.append(f"{metric}{_fmt_labels(base)} "
+                     f"{controller.total_queued_bytes():.9g}")
     return "\n".join(lines) + "\n"
 
 

@@ -39,13 +39,18 @@ remap + admit/evict plan (see ``etl_runtime/lookahead.py``).
 
 Backpressure: each queue holds at most ``credits`` items and every stage
 blocks when its output queue is full, rate-matching ETL to trainer
-consumption exactly as the FPGA write path does.  With
-``adaptive_credits=True`` the budget is sized from measured stage occupancy
-instead of staying fixed: when the trainer starves across a decision window
-the staging queues grow (up to ``max_credits``) to absorb ETL jitter, and
-when batches pile up unconsumed the budget shrinks back toward the initial
-value (bounding staging memory).  Resizes are counted in
-``stats.credit_grows`` / ``stats.credit_shrinks``.
+consumption exactly as the FPGA write path does.  Knob tuning lives in
+``etl_runtime.controller``: ``autotune=`` runs the measured-throughput
+``PipelineController`` over every declared knob, while the deprecated
+``adaptive_credits=True`` constructs the compatibility occupancy
+controller (same grow-on-starve / shrink-on-idle-full thresholds as the
+old in-executor rule, plus hysteresis).  Either way resizes land in
+``stats.credit_grows`` / ``stats.credit_shrinks`` via ``set_credits``.
+
+Timing: every busy/wait/staleness timestamp goes through the injected
+``Clock`` (``etl_runtime.clock``; defaults to the system clock), so
+timing-dependent tests can substitute a ``VirtualClock`` instead of
+depending on wall-clock sleeps.
 
 Freshness: with ``FreshnessPolicy.online``, a full ready queue sheds its
 *oldest* queued batch to admit the fresh one (time-to-freshness over
@@ -81,6 +86,7 @@ import numpy as np
 from repro.core.semantics import PipelineSemantics
 from repro.data.source import Source
 from repro.etl_runtime import transfer as transfer_lib
+from repro.etl_runtime.clock import SYSTEM_CLOCK, Clock
 
 
 class _EOS:
@@ -100,13 +106,15 @@ class CreditQueue:
     sheds its oldest entry to admit the new one (oldest-first drop).
     """
 
-    def __init__(self, capacity: int, stop: threading.Event, name: str = ""):
+    def __init__(self, capacity: int, stop: threading.Event, name: str = "",
+                 clock: Optional[Clock] = None):
         self.capacity = max(1, capacity)
         self.name = name
         self.dropped = 0  # lifetime count of entries shed by drop_oldest
         self._dq: collections.deque = collections.deque()
         self._cv = threading.Condition()
         self._stop = stop
+        self._clock = clock or SYSTEM_CLOCK
 
     def __len__(self) -> int:
         with self._cv:
@@ -174,7 +182,8 @@ class CreditQueue:
     def get(self, timeout: Optional[float] = None):
         """Block until an item is available. Raises ``queue.Empty`` on
         timeout; returns ``_STOPPED`` if the executor stopped."""
-        deadline = None if timeout is None else time.monotonic() + timeout
+        deadline = (None if timeout is None
+                    else self._clock.monotonic() + timeout)
         with self._cv:
             while True:
                 # stop takes precedence over draining: shutdown is prompt
@@ -183,7 +192,7 @@ class CreditQueue:
                 if self._dq:
                     break
                 if deadline is not None:
-                    rem = deadline - time.monotonic()
+                    rem = deadline - self._clock.monotonic()
                     if rem <= 0:
                         raise queue.Empty
                     self._cv.wait(rem)
@@ -290,6 +299,11 @@ class RuntimeStats:
     ingest_events: int = 0
     t_start: Optional[float] = None          # monotonic, set at start()
     t_last_ingest: Optional[float] = None    # monotonic, last read item
+    # live knob values ({name: value}) + the owning PipelineController
+    # when the executor runs with autotune/adaptive credits; exported as
+    # gauges by etl_runtime.metrics
+    knobs: dict = field(default_factory=dict)
+    controller: Optional[object] = None
 
     def note_delivered(self, arrival: float,
                        now: Optional[float] = None) -> None:
@@ -298,9 +312,9 @@ class RuntimeStats:
         self.delivered_ages.append(age)
         self.staleness.observe(max(0.0, age))
 
-    def note_ingest(self) -> None:
+    def note_ingest(self, now: Optional[float] = None) -> None:
         self.ingest_events += 1
-        self.t_last_ingest = time.monotonic()
+        self.t_last_ingest = time.monotonic() if now is None else now
 
     def ingest_rate(self) -> float:
         """Mean ingested events/sec over the active span (read-stage items
@@ -359,7 +373,8 @@ class _Stage(threading.Thread):
                  in_timeout_s: Optional[float] = None,
                  on_in_timeout: Optional[Callable[[], None]] = None,
                  on_put: Optional[Callable[[int], None]] = None,
-                 on_error: Optional[Callable[[BaseException], None]] = None):
+                 on_error: Optional[Callable[[BaseException], None]] = None,
+                 clock: Optional[Clock] = None):
         super().__init__(name=f"etl-{stats.name}", daemon=True)
         self.stats = stats
         self.fn = fn
@@ -370,24 +385,26 @@ class _Stage(threading.Thread):
         self.on_in_timeout = on_in_timeout
         self.on_put = on_put
         self.on_error = on_error
+        self._clock = clock or SYSTEM_CLOCK
 
     def run(self):
+        mono = self._clock.monotonic
         while True:
-            t0 = time.perf_counter()
+            t0 = mono()
             try:
                 item = self.in_q.get(timeout=self.in_timeout_s)
             except queue.Empty:
-                self.stats.wait_in_s += time.perf_counter() - t0
+                self.stats.wait_in_s += mono() - t0
                 if self.on_in_timeout:
                     self.on_in_timeout()
                 continue
-            self.stats.wait_in_s += time.perf_counter() - t0
+            self.stats.wait_in_s += mono() - t0
             if item is _STOPPED:
                 return
             if item is _EOS:
                 self.out_q.put(_EOS)
                 return
-            t1 = time.perf_counter()
+            t1 = mono()
             try:
                 out = self.fn(item)
             except Exception as e:
@@ -396,10 +413,10 @@ class _Stage(threading.Thread):
                 if self.on_error:
                     self.on_error(e)
                 return
-            self.stats.busy_s += time.perf_counter() - t1
-            t2 = time.perf_counter()
+            self.stats.busy_s += mono() - t1
+            t2 = mono()
             r = self.out_q.put(out, drop_oldest=self.drop_oldest)
-            self.stats.wait_out_s += time.perf_counter() - t2
+            self.stats.wait_out_s += mono() - t2
             if r is _STOPPED:
                 return
             self.stats.items += 1
@@ -410,8 +427,8 @@ class _Stage(threading.Thread):
 
 def _pump_source(source, out_q: CreditQueue, stats: StageStats,
                  stop: threading.Event, *, wrap: Optional[Callable] = None,
-                 on_error: Optional[Callable[[BaseException], None]] = None
-                 ) -> None:
+                 on_error: Optional[Callable[[BaseException], None]] = None,
+                 clock: Optional[Clock] = None) -> None:
     """The read stage's pump loop, shared by the executor's read thread and
     the standalone ``SourcePrefetcher``: drain ``source`` into ``out_q``
     with busy / wait-out accounting, then enqueue a stop-aware EOS (never a
@@ -419,11 +436,12 @@ def _pump_source(source, out_q: CreditQueue, stats: StageStats,
     item at read time (the executor stamps envelope metadata here);
     ``on_error`` sets the failure policy (the executor stops the whole
     pipeline, the prefetcher records and re-raises at the consumer)."""
+    mono = (clock or SYSTEM_CLOCK).monotonic
     try:
         it = iter(source)
         idx = 0
         while not stop.is_set():
-            t0 = time.perf_counter()
+            t0 = mono()
             try:
                 raw = next(it)
                 item = raw if wrap is None else wrap(raw, idx)
@@ -433,11 +451,11 @@ def _pump_source(source, out_q: CreditQueue, stats: StageStats,
                 if on_error is not None:
                     on_error(e)
                 return
-            stats.busy_s += time.perf_counter() - t0
+            stats.busy_s += mono() - t0
             idx += 1
-            t1 = time.perf_counter()
+            t1 = mono()
             r = out_q.put(item)
-            stats.wait_out_s += time.perf_counter() - t1
+            stats.wait_out_s += mono() - t1
             if r is _STOPPED:
                 return
             stats.items += 1
@@ -478,7 +496,8 @@ class _SortStage(threading.Thread):
     def __init__(self, stats: StageStats, in_q: CreditQueue,
                  out_q: CreditQueue, *, window: int,
                  length_key: Callable = default_length_key,
-                 on_error: Optional[Callable[[BaseException], None]] = None):
+                 on_error: Optional[Callable[[BaseException], None]] = None,
+                 clock: Optional[Clock] = None):
         super().__init__(name=f"etl-{stats.name}", daemon=True)
         self.stats = stats
         self.in_q = in_q
@@ -486,15 +505,17 @@ class _SortStage(threading.Thread):
         self.window = max(2, window)
         self.length_key = length_key
         self.on_error = on_error
+        self._clock = clock or SYSTEM_CLOCK
 
     def _flush(self, buf: list) -> bool:
-        t0 = time.perf_counter()
+        mono = self._clock.monotonic
+        t0 = mono()
         buf.sort(key=lambda kv: kv[0])
-        self.stats.busy_s += time.perf_counter() - t0
+        self.stats.busy_s += mono() - t0
         for _, item in buf:
-            t1 = time.perf_counter()
+            t1 = mono()
             r = self.out_q.put(item)
-            self.stats.wait_out_s += time.perf_counter() - t1
+            self.stats.wait_out_s += mono() - t1
             if r is _STOPPED:
                 return False
             self.stats.items += 1
@@ -502,11 +523,12 @@ class _SortStage(threading.Thread):
         return True
 
     def run(self):
+        mono = self._clock.monotonic
         buf: list = []
         while True:
-            t0 = time.perf_counter()
+            t0 = mono()
             item = self.in_q.get()
-            self.stats.wait_in_s += time.perf_counter() - t0
+            self.stats.wait_in_s += mono() - t0
             if item is _STOPPED:
                 return
             if item is _EOS:
@@ -514,7 +536,7 @@ class _SortStage(threading.Thread):
                     return
                 self.out_q.put(_EOS)
                 return
-            t1 = time.perf_counter()
+            t1 = mono()
             try:
                 key = item.length_key
                 if key is None:
@@ -524,7 +546,7 @@ class _SortStage(threading.Thread):
                 if self.on_error:
                     self.on_error(e)
                 return
-            self.stats.busy_s += time.perf_counter() - t1
+            self.stats.busy_s += mono() - t1
             if len(buf) >= self.window and not self._flush(buf):
                 return
 
@@ -543,15 +565,22 @@ class SourcePrefetcher:
     also closes a closeable Source.
     """
 
-    def __init__(self, source, *, credits: int = 2, name: str = "fit-read"):
+    def __init__(self, source, *, credits: int = 2, name: str = "fit-read",
+                 clock: Optional[Clock] = None):
         self._source = source
         self._stop = threading.Event()
-        self._q = CreditQueue(max(1, credits), self._stop, name)
+        self._clock = clock or SYSTEM_CLOCK
+        self._q = CreditQueue(max(1, credits), self._stop, name,
+                              clock=self._clock)
         self.stats = StageStats(name)
         self._error: Optional[BaseException] = None
         self._thread = threading.Thread(target=self._read_loop,
                                         name=f"etl-{name}", daemon=True)
         self._started = False
+
+    def set_credits(self, credits: int) -> None:
+        """Resize the prefetch depth (the controller's prefetch knob)."""
+        self._q.set_capacity(max(1, int(credits)))
 
     def _read_loop(self):
         def record(e: BaseException) -> None:
@@ -560,7 +589,7 @@ class SourcePrefetcher:
             self._error = e
 
         _pump_source(self._source, self._q, self.stats, self._stop,
-                     on_error=record)
+                     on_error=record, clock=self._clock)
 
     def start(self) -> "SourcePrefetcher":
         if not self._started:
@@ -571,10 +600,11 @@ class SourcePrefetcher:
     def __iter__(self):
         self.start()
         st = self.stats
+        mono = self._clock.monotonic
         while True:
-            t0 = time.perf_counter()
+            t0 = mono()
             item = self._q.get()
-            st.wait_in_s += time.perf_counter() - t0
+            st.wait_in_s += mono() - t0
             if item is _EOS or item is _STOPPED:
                 if item is _EOS:
                     self._q.put(_EOS)  # re-arm: a later iteration ends too
@@ -620,10 +650,21 @@ class StreamingExecutor:
         ``sharding=transfer.batch_sharding(mesh)``.
     read_timeout_s : straggler bound on the raw queue; a stall beyond this is
         skipped (counted), not fatal.
-    adaptive_credits : size the credit budget from measured occupancy — grow
-        the staging queues when the trainer starves, shrink when batches sit
-        unconsumed (see module docstring).
-    max_credits : upper bound for adaptive growth.
+    adaptive_credits : deprecated spelling of the occupancy-rule credits
+        controller (grow on starvation, shrink on idle-full, with
+        hysteresis); prefer ``autotune=``.  Ignored when ``autotune`` is
+        set.
+    max_credits : upper bound for adaptive/autotuned credit growth.
+    autotune : ``True`` builds the default measured-throughput
+        ``PipelineController`` over this executor's knobs (credits,
+        prefetch depth, lookahead window); a ``PipelineController``
+        instance is bound as-is (its knob list is extended with the
+        executor knobs it does not already declare).  The controller's
+        decisions and live knob values land in ``stats.controller`` /
+        ``stats.knobs`` and the Prometheus export.
+    clock : timing source (``etl_runtime.clock.Clock``); defaults to the
+        system clock.  Tests inject a ``VirtualClock`` so stage timers
+        and controller windows are deterministic.
     length_key : *fallback* batch -> sortable length for bucket_by_length
         ordering (default: token count via ``default_length_key``); only
         consulted when the Source did not supply a host-side key.
@@ -639,7 +680,7 @@ class StreamingExecutor:
         delivered plan, in order, for the host mirror to stay coherent.
     """
 
-    _ADAPT_EVERY = 4          # deliveries per resize decision
+    _ADAPT_EVERY = 4          # deliveries per resize decision (occupancy)
     _STARVED_EPS_S = 1e-3     # a delivery that waited longer counts starved
 
     def __init__(self, pipeline, source, *,
@@ -649,8 +690,10 @@ class StreamingExecutor:
                  sharding=None, mesh=None,
                  read_timeout_s: float = 30.0,
                  adaptive_credits: bool = False, max_credits: int = 8,
+                 autotune=None,
                  length_key: Callable = default_length_key,
-                 transform_service=None, lookahead=None):
+                 transform_service=None, lookahead=None,
+                 clock: Optional[Clock] = None):
         self.pipeline = pipeline
         self.semantics = semantics or getattr(pipeline, "semantics", None)
         self.credits = max(1, credits)
@@ -658,7 +701,7 @@ class StreamingExecutor:
         self.adaptive_credits = adaptive_credits
         self.max_credits = max(self.credits, max_credits)
         self.current_credits = self.credits
-        self._adapt_waits: list[tuple] = []  # (wait_s, ready_full_at_pop)
+        self.clock = clock or SYSTEM_CLOCK
         if place is None:
             if sharding is None and mesh is not None:
                 sharding = transfer_lib.batch_sharding(mesh)
@@ -690,10 +733,14 @@ class StreamingExecutor:
             self.stats.stages[name] = StageStats(name)
 
         fresh = bool(self.semantics and self.semantics.freshness.online)
-        self._raw_q = CreditQueue(self.credits, self._stop, "raw")
-        self._packed_q = CreditQueue(self.credits, self._stop, "packed")
-        self._ready_q = CreditQueue(self.credits, self._stop, "ready")
-        self._placed_q = (CreditQueue(self.credits, self._stop, "placed")
+        ck = self.clock
+        self._raw_q = CreditQueue(self.credits, self._stop, "raw", clock=ck)
+        self._packed_q = CreditQueue(self.credits, self._stop, "packed",
+                                     clock=ck)
+        self._ready_q = CreditQueue(self.credits, self._stop, "ready",
+                                    clock=ck)
+        self._placed_q = (CreditQueue(self.credits, self._stop, "placed",
+                                      clock=ck)
                           if lookahead is not None else None)
 
         def _on_straggler():
@@ -719,11 +766,12 @@ class StreamingExecutor:
         if reorder:
             # sorting stage between transform and place (ROADMAP item):
             # its window is additional bounded staging, not credit-counted
-            self._sorted_q = CreditQueue(self.credits, self._stop, "sorted")
+            self._sorted_q = CreditQueue(self.credits, self._stop, "sorted",
+                                         clock=ck)
             self._stages.append(_SortStage(
                 self.stats.stages["order"], self._packed_q, self._sorted_q,
                 window=ordering.reorder_window, length_key=length_key,
-                on_error=_on_error))
+                on_error=_on_error, clock=ck))
             place_in_q = self._sorted_q
         else:
             self._sorted_q = None
@@ -734,14 +782,18 @@ class StreamingExecutor:
                 return replace(env, payload=fn(env.payload))
             return run
 
-        transform_fn = self.pipeline
+        # the transform reads self.pipeline per batch (not a captured
+        # reference) so swap_pipeline — the row-tile/fuse knob actuator —
+        # takes effect on the next batch without restarting the stage
+        def transform_fn(raw):
+            return self.pipeline(raw)
         if self._transform_service is not None:
-            def transform_fn(raw, _p=self.pipeline):
+            def transform_fn(raw):
                 # weighted round-robin *service*: device time, not just
                 # staging credits, follows tenant weights
                 granted = self._transform_service.acquire(stop=self._stop)
                 try:
-                    return _p(raw)
+                    return self.pipeline(raw)
                 finally:
                     if granted:
                         self._transform_service.release()
@@ -750,27 +802,45 @@ class StreamingExecutor:
             _Stage(self.stats.stages["transform"], _env_fn(transform_fn),
                    self._raw_q, self._packed_q,
                    in_timeout_s=self.read_timeout_s,
-                   on_in_timeout=_on_straggler, on_error=_on_error),
+                   on_in_timeout=_on_straggler, on_error=_on_error,
+                   clock=ck),
             *self._stages,
             _Stage(self.stats.stages["place"], _env_fn(self.place),
                    place_in_q, place_out_q,
                    drop_oldest=fresh,
                    on_put=_on_shed if lookahead is not None else _on_delivered,
-                   on_error=_on_error),
+                   on_error=_on_error, clock=ck),
         ]
+        self._lookahead_stage = None
         if lookahead is not None:
             # imported here: lookahead.py reuses this module's queue/stats
             # machinery, so a module-level import would be circular
             from repro.etl_runtime.lookahead import CacheStats, LookaheadStage
             self.stats.cache = CacheStats(row_bytes=lookahead.row_bytes)
-            self._stages.append(LookaheadStage(
+            self._lookahead_stage = LookaheadStage(
                 self.stats.stages["lookahead"], self._placed_q, self._ready_q,
                 lookahead, cache_stats=self.stats.cache,
-                on_put=_on_delivered, on_error=_on_error))
+                on_put=_on_delivered, on_error=_on_error, clock=ck)
+            self._stages.append(self._lookahead_stage)
         self._on_error = _on_error
         self._reader = threading.Thread(target=self._read_loop,
                                         name="etl-read", daemon=True)
         self._started = False
+        # ---- knob controller (autotune / deprecated adaptive_credits) ----
+        self.stats.knobs["credits"] = self.current_credits
+        self._controller = None
+        if autotune:
+            from repro.etl_runtime.controller import PipelineController
+            if isinstance(autotune, PipelineController):
+                autotune.bind_executor(self)
+                self._controller = autotune
+            else:
+                self._controller = PipelineController.for_executor(self)
+        elif adaptive_credits:
+            from repro.etl_runtime.controller import PipelineController
+            self._controller = PipelineController.adaptive_credits(self)
+        if self._controller is not None:
+            self.stats.controller = self._controller
 
     # ---- read stage (source iterators don't fit the queue-in shape) ------
 
@@ -782,60 +852,82 @@ class StreamingExecutor:
                    if self._host_key_fn is not None else None)
             arrival = (self._arrival_fn(idx)
                        if self._arrival_fn is not None else None)
-            self.stats.note_ingest()
+            self.stats.note_ingest(now=self.clock.monotonic())
             return _Envelope(raw, key, arrival)
 
         _pump_source(self._source, self._raw_q, self.stats.stages["read"],
-                     self._stop, wrap=wrap, on_error=self._on_error)
+                     self._stop, wrap=wrap, on_error=self._on_error,
+                     clock=self.clock)
 
-    # ---- adaptive credits (occupancy-sized staging budget) ---------------
+    # ---- knob actuators (PipelineController apply hooks) -----------------
 
-    def _adapt(self, wait_s: float) -> None:
-        """One deliver-side observation; resize every ``_ADAPT_EVERY``.
+    def set_credits(self, credits: int) -> None:
+        """Resize the whole staging budget to ``credits``.
 
-        Grow when the trainer starved on at least half of the window's
-        deliveries (deeper staging absorbs ETL jitter); shrink back toward
-        the configured floor when the window saw no starvation and every
-        pop found the ready queue full (staging memory doing nothing).
-        Fullness is sampled at pop time — the item just taken plus the
-        remaining depth — so the decision does not race the producer
-        refilling the queue.  Reclaim happens on deliveries: a fully paused
-        trainer holds the grown budget until it consumes again.
+        Every stage queue — the raw (read→transform) queue included — gets
+        the new capacity: a starving trainer deepens ingest prefetch too,
+        and the shrink path reclaims that staging memory symmetrically.
+        Grow/shrink counters land in stats exactly one per step, so the
+        controller's one-step moves keep the legacy resize accounting.
         """
-        if not self.adaptive_credits:
+        credits = max(1, int(credits))
+        if credits == self.current_credits:
             return
-        full_at_pop = len(self._ready_q) + 1 >= self._ready_q.capacity
-        self._adapt_waits.append((wait_s, full_at_pop))
-        if len(self._adapt_waits) < self._ADAPT_EVERY:
-            return
-        starved = sum(1 for w, _ in self._adapt_waits
-                      if w > self._STARVED_EPS_S)
-        always_full = all(f for _, f in self._adapt_waits)
-        self._adapt_waits.clear()
-        if starved >= self._ADAPT_EVERY // 2 and \
-                self.current_credits < self.max_credits:
-            self.current_credits += 1
+        if credits > self.current_credits:
             self.stats.credit_grows += 1
-        elif starved == 0 and always_full and \
-                self.current_credits > self.credits:
-            self.current_credits -= 1
-            self.stats.credit_shrinks += 1
         else:
-            return
-        # the raw (read→transform) queue resizes with the rest of the
-        # budget: a starving trainer deepens ingest prefetch too, and the
-        # shrink path reclaims that staging memory symmetrically
+            self.stats.credit_shrinks += 1
+        self.current_credits = credits
         for q in (self._raw_q, self._packed_q, self._ready_q, self._sorted_q,
                   self._placed_q):
             if q is not None:
-                q.set_capacity(self.current_credits)
+                q.set_capacity(credits)
         self.stats.raw_resizes += 1
+        self.stats.knobs["credits"] = credits
+
+    def set_prefetch_depth(self, depth: int) -> None:
+        """Resize only the raw (read→transform) queue — the prefetch-depth
+        knob, independent of the downstream staging credits."""
+        depth = max(1, int(depth))
+        self._raw_q.set_capacity(depth)
+        self.stats.knobs["prefetch_depth"] = depth
+
+    def set_lookahead_window(self, window: int) -> None:
+        """Resize the lookahead planning window (no-op without the
+        lookahead stage)."""
+        if self._lookahead_stage is not None:
+            self._lookahead_stage.set_window(window)
+            self.stats.knobs["lookahead_window"] = max(1, int(window))
+
+    def swap_pipeline(self, pipeline) -> None:
+        """Atomically swap the transform program (the row-tile / fuse knob
+        actuator: ``EtlJob`` recompiles via ``CompiledPipeline.with_knobs``
+        — sharing vocabulary state — and swaps it in here).  The transform
+        stage reads ``self.pipeline`` per batch, so the next batch uses
+        the new program; in-flight batches finish on the old one."""
+        self.pipeline = pipeline
+
+    # ---- controller sensor (deliver-side observation) --------------------
+
+    def _adapt(self, wait_s: float) -> None:
+        """One deliver-side observation, forwarded to the controller.
+
+        Fullness is sampled at pop time — the item just taken plus the
+        remaining depth — so the decision does not race the producer
+        refilling the queue.  Decisions happen on deliveries: a fully
+        paused trainer holds the grown budget until it consumes again.
+        """
+        if self._controller is None:
+            return
+        full_at_pop = len(self._ready_q) + 1 >= self._ready_q.capacity
+        self._controller.on_delivery(wait_s=wait_s, ready_full=full_at_pop,
+                                     now=self.clock.monotonic())
 
     # ---- public API ------------------------------------------------------
 
     def start(self) -> "StreamingExecutor":
         if not self._started:
-            self.stats.t_start = time.monotonic()
+            self.stats.t_start = self.clock.monotonic()
             self._reader.start()
             for s in self._stages:
                 s.start()
@@ -849,10 +941,11 @@ class StreamingExecutor:
     def __iter__(self):
         self.start()
         dst = self.stats.stages["deliver"]
+        mono = self.clock.monotonic
         while True:
-            w0 = time.perf_counter()
+            w0 = mono()
             item = self._ready_q.get()
-            wait = time.perf_counter() - w0
+            wait = mono() - w0
             self.stats.consumer_wait_s += wait
             dst.wait_in_s += wait
             if item is _EOS or item is _STOPPED:
@@ -861,16 +954,17 @@ class StreamingExecutor:
             self.stats.consumed += 1
             dst.items += 1
             if item.arrival is not None:
-                self.stats.note_delivered(item.arrival)
+                self.stats.note_delivered(item.arrival, now=mono())
             self._adapt(wait)
             yield item.payload
 
     def get_batch(self, timeout: Optional[float] = None):
         self.start()
         dst = self.stats.stages["deliver"]
-        w0 = time.perf_counter()
+        mono = self.clock.monotonic
+        w0 = mono()
         item = self._ready_q.get(timeout=timeout)
-        wait = time.perf_counter() - w0
+        wait = mono() - w0
         self.stats.consumer_wait_s += wait
         dst.wait_in_s += wait
         if item is _EOS or item is _STOPPED:
@@ -879,7 +973,7 @@ class StreamingExecutor:
         self.stats.consumed += 1
         dst.items += 1
         if item.arrival is not None:
-            self.stats.note_delivered(item.arrival)
+            self.stats.note_delivered(item.arrival, now=mono())
         self._adapt(wait)
         return item.payload
 

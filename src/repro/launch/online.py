@@ -77,6 +77,9 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--metrics-file", default="",
                     help="write executor stats (incl. the staleness "
                          "histogram) as Prometheus text here")
+    ap.add_argument("--autotune", action="store_true",
+                    help="run the self-tuning PipelineController over the "
+                         "executor knobs")
     ap.add_argument("--seed", type=int, default=11)
     return ap
 
@@ -94,6 +97,7 @@ def build_service(args):
                           batch_size=args.batch)
     job = EtlJob(pipe, Source.events(bus, args.topic),
                  backend=args.etl_backend,
+                 autotune=getattr(args, "autotune", False) or None,
                  metrics_file=args.metrics_file,
                  metrics_labels={"service": "online"},
                  name="online")

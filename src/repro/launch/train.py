@@ -36,7 +36,7 @@ from repro.training.train_loop import (LoopConfig, TrainState, jit_train_step,
 
 
 def make_job(cfg, batch, seq, steps, *, backend="jnp", mesh=None,
-             metrics_file="", embed_cache=None) -> EtlJob:
+             metrics_file="", embed_cache=None, autotune=None) -> EtlJob:
     """Declarative ingest session: raw event logs -> token batches.
 
     The ``Source`` names the stream; ``EtlJob`` owns compile + executor
@@ -51,7 +51,7 @@ def make_job(cfg, batch, seq, steps, *, backend="jnp", mesh=None,
     src = Source.lm_events(seq, rows=batch * (steps + 4), batch_size=batch)
     return EtlJob(pipe, src, backend=backend, mesh=mesh, credits=2,
                   metrics_file=metrics_file, embed_cache=embed_cache,
-                  metrics_labels={"arch": cfg.name})
+                  autotune=autotune, metrics_labels={"arch": cfg.name})
 
 
 def embed_cache_config(args):
@@ -94,6 +94,10 @@ def main(argv=None):
                          "(default: all columns of the index matrix)")
     ap.add_argument("--embed-cache-key", default="sparse",
                     help="payload key holding the [batch, tables] indices")
+    ap.add_argument("--autotune", action="store_true",
+                    help="run the self-tuning PipelineController over the "
+                         "executor knobs (credits, prefetch depth, "
+                         "lookahead window; row tile/fuse on pallas)")
     args = ap.parse_args(argv)
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
@@ -141,7 +145,8 @@ def main(argv=None):
             job = make_job(cfg, args.batch, args.seq, args.steps,
                            backend=args.etl_backend, mesh=mesh,
                            metrics_file=args.metrics_file,
-                           embed_cache=embed_cache_config(args))
+                           embed_cache=embed_cache_config(args),
+                           autotune=args.autotune or None)
             loop_cfg = LoopConfig(total_steps=args.steps,
                                   ckpt_dir=args.ckpt_dir,
                                   ckpt_every=args.ckpt_every,

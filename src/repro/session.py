@@ -45,6 +45,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import warnings
 from typing import Callable, Optional
 
 from repro.core.compiler import CompiledPipeline
@@ -71,8 +72,16 @@ class EtlJob:
     fit_source : Source for ``fit()`` when it differs from ``source``.
     freshness, ordering : per-job overrides of the pipeline's semantics.
     credits, adaptive_credits, max_credits, read_timeout_s, mesh, sharding,
-    place, length_key, transform_service : forwarded to the executor
-        (see ``StreamingExecutor``).
+    place, length_key, transform_service, clock : forwarded to the executor
+        (see ``StreamingExecutor``).  ``adaptive_credits=True`` is
+        deprecated — pass ``autotune=`` instead.
+    autotune : ``True`` builds the measured-throughput
+        ``PipelineController`` over the executor's runtime knobs; a
+        ``PipelineController`` instance is bound as-is.  On the pallas
+        backend the job additionally declares the compile-time knobs —
+        planner ``row_tile`` and fuse on/off — whose actuator recompiles
+        via ``CompiledPipeline.with_knobs`` (vocabulary state shared) and
+        hot-swaps the executor's transform program.
     embed_cache : optional ``etl_runtime.lookahead.EmbedCacheConfig``; adds
         the lookahead prefetch stage to the executor (rows, window,
         per-table on/off) so delivered batches carry embedding-cache plans.
@@ -91,7 +100,8 @@ class EtlJob:
                  freshness: Optional[FreshnessPolicy] = None,
                  ordering: Optional[OrderingPolicy] = None,
                  credits: int = 2, adaptive_credits: bool = False,
-                 max_credits: int = 8, read_timeout_s: float = 30.0,
+                 max_credits: int = 8, autotune=None, clock=None,
+                 read_timeout_s: float = 30.0,
                  mesh=None, sharding=None, place=None,
                  length_key: Callable = default_length_key,
                  transform_service=None, embed_cache=None,
@@ -117,12 +127,18 @@ class EtlJob:
                             if fit_source is not None else None)
         self._freshness = freshness
         self._ordering = ordering
+        if adaptive_credits and autotune is None:
+            warnings.warn(
+                "adaptive_credits=True is deprecated; pass autotune=True "
+                "(or a PipelineController) for the unified knob controller",
+                DeprecationWarning, stacklevel=2)
+        self._autotune = autotune
         self._executor_kw = dict(
             credits=credits, adaptive_credits=adaptive_credits,
             max_credits=max_credits, read_timeout_s=read_timeout_s,
             mesh=mesh, sharding=sharding, place=place,
             length_key=length_key, transform_service=transform_service,
-            lookahead=embed_cache)
+            lookahead=embed_cache, clock=clock)
         self._rebatch = rebatch
         self._pushdown = pushdown
         self.metrics_file = metrics_file
@@ -239,10 +255,65 @@ class EtlJob:
         transform-stage callable while keeping the job's compiled semantics
         and every other knob — ``repro.online.OnlineTrainer`` wraps the
         compiled program to tag each batch with its vocabulary version."""
-        return StreamingExecutor(transform or self.compiled,
-                                 self.apply_source(),
-                                 semantics=self.semantics,
-                                 **self._executor_kw)
+        autotune = self._autotune
+        holder: dict = {"ex": None}
+        if autotune and transform is None:
+            autotune = self._autotune_controller(autotune, holder)
+        ex = StreamingExecutor(transform or self.compiled,
+                               self.apply_source(),
+                               semantics=self.semantics,
+                               autotune=autotune,
+                               **self._executor_kw)
+        holder["ex"] = ex
+        return ex
+
+    def _autotune_controller(self, autotune, holder: dict):
+        """Normalize ``autotune=`` to a ``PipelineController``, declaring
+        the job-level compile-time knobs (planner ``row_tile``, fuse
+        on/off) when the compiled pipeline supports ``with_knobs`` (the
+        pallas backend).  The actuator recompiles — vocabulary state
+        shared, variants cached — and hot-swaps the executor's transform
+        program; the executor then binds its own runtime knobs."""
+        from repro.etl_runtime.controller import Knob, PipelineController
+        ctl = (autotune if isinstance(autotune, PipelineController)
+               else PipelineController([]))
+        cp = self.compiled
+        if not hasattr(cp, "with_knobs") or cp.backend != "pallas":
+            return ctl
+        have = {k.name for k in ctl.knobs}
+        base_tile = cp.plan.row_tile
+        cur = {"row_tile": base_tile, "fuse": cp.fuse_spec() != "off"}
+        variants = {(base_tile, cur["fuse"]): cp}
+
+        def swap():
+            key = (cur["row_tile"], cur["fuse"])
+            new = variants.get(key)
+            if new is None:
+                new = cp.with_knobs(row_tile=cur["row_tile"],
+                                    fuse="auto" if cur["fuse"] else "off")
+                variants[key] = new
+            ex = holder["ex"]
+            if ex is not None:
+                ex.swap_pipeline(new)
+                ex.stats.knobs["row_tile"] = cur["row_tile"]
+                ex.stats.knobs["fuse"] = cur["fuse"]
+
+        def apply_row_tile(v):
+            cur["row_tile"] = int(v)
+            swap()
+
+        def apply_fuse(v):
+            cur["fuse"] = bool(v)
+            swap()
+
+        if "row_tile" not in have:
+            cands = tuple(sorted({64, 128, 256, 512, base_tile}))
+            ctl.knobs.append(Knob("row_tile", cands, value=base_tile,
+                                  apply=apply_row_tile, kind="compute"))
+        if "fuse" not in have and cp.fuse_spec() != "off":
+            ctl.knobs.append(Knob("fuse", (False, True), value=cur["fuse"],
+                                  apply=apply_fuse, kind="compute"))
+        return ctl
 
     def start(self) -> StreamingExecutor:
         if self._executor is None:

@@ -1,0 +1,351 @@
+"""Self-tuning PipelineController: convergence, determinism, pressure,
+hysteresis, knob-application equivalence — all on the deterministic
+simulation harness (tests/simclock.py), plus live-executor integration."""
+
+import numpy as np
+import pytest
+
+from proptest import given, strategies as st
+from simclock import SimPipeline, SimWorkload, VirtualClock
+
+from repro.core.pipeline import paper_pipeline
+from repro.data import synth
+from repro.etl_runtime.controller import Knob, PipelineController
+from repro.etl_runtime.runtime import StreamingExecutor
+
+
+# ---------------- simulation harness sanity ----------------
+
+def test_simpipeline_consumer_bound_is_analytic():
+    """One ETL stage cheaper than the consumer: after the initial fill the
+    consumer never waits, so the makespan is exactly fill + N * step."""
+    r = SimPipeline([0.5], [2], 1.0).run(8)
+    assert r.makespan == pytest.approx(0.5 + 8 * 1.0)
+    assert r.starved() == 1                      # only the first delivery
+    assert r.consumer_waits[0] == pytest.approx(0.5)
+    assert all(w == 0.0 for w in r.consumer_waits[1:])
+    assert r.stage_busy_s[0] == pytest.approx(8 * 0.5)
+
+
+def test_simpipeline_credits_absorb_spikes():
+    """Periodic ETL spikes starve a shallow queue but not a deep one —
+    the signal the credits knob exists to exploit."""
+    def spiky(i):
+        return 3.0 if i % 4 == 3 else 0.2
+
+    shallow = SimPipeline([spiky], [1], 1.0).run(32)
+    deep = SimPipeline([spiky], [4], 1.0).run(32)
+    assert deep.throughput > shallow.throughput
+    assert deep.starved() < shallow.starved()
+
+
+# ---------------- hill-climber convergence (acceptance) ----------------
+
+@pytest.mark.parametrize("seed", [0, 1, 5])
+def test_converges_within_10pct_of_sweep_optimum(seed):
+    """<= 30 observation windows land within 10% of the exhaustive-sweep
+    optimum, from a deliberately bad default, under any fixed seed."""
+    w = SimWorkload()
+    best, _ = w.optimum()
+    untuned = w.throughput()
+    ctl = PipelineController(w.make_knobs(), mode="throughput",
+                             seed=seed, tolerance=0.005)
+    for _ in range(30):
+        ctl.observe_window(w.throughput())
+    ctl.restore_best()
+    final = w.throughput()
+    assert ctl.window <= 30
+    assert final >= 0.90 * best
+    assert final >= untuned            # never worse than where it started
+    # every decision stayed inside the declared candidate domain
+    domains = {k.name: set(k.candidates) for k in ctl.knobs}
+    for _, knob, _, value in ctl.decision_log():
+        assert value in domains[knob]
+
+
+def test_convergence_is_deterministic_under_fixed_seed():
+    """Same seed, same workload -> bit-identical decision history."""
+    runs = []
+    for _ in range(2):
+        w = SimWorkload()
+        ctl = PipelineController(w.make_knobs(), mode="throughput",
+                                 seed=3, tolerance=0.005)
+        for _ in range(30):
+            ctl.observe_window(w.throughput())
+        runs.append((ctl.decision_log(), ctl.knob_values(), dict(w.settings)))
+    assert runs[0] == runs[1]
+
+
+def test_throughput_drift_reopens_a_converged_search():
+    """>10% regime change un-retires the knobs (the climber probes again)."""
+    w = SimWorkload()
+    ctl = PipelineController(w.make_knobs(), mode="throughput",
+                             seed=0, tolerance=0.005)
+    quiet = 0
+    for _ in range(80):                       # run to full convergence
+        quiet = quiet + 1 if not ctl.observe_window(w.throughput()) else 0
+        if quiet >= 3:
+            break
+    assert quiet >= 3, "climber never converged"
+    w.train_cost = 3.0                        # regime change: >10% drop
+    probed = []
+    for _ in range(3):
+        probed += [d for d in ctl.observe_window(w.throughput())
+                   if d.action == "probe"]
+    assert probed, "drift did not reopen the search"
+
+
+# ---------------- property: tuned never below untuned ----------------
+
+@given(st.lists(st.floats(0.05, 1.5), min_size=1, max_size=3),
+       st.floats(0.2, 1.2), st.integers(0, 999))
+def test_tuning_never_decreases_steady_state_throughput(costs, train, seed):
+    """Random stage-cost vectors: after restore_best() the tuned pipeline's
+    simulated throughput is >= the untuned default, and every knob value
+    the controller ever applied is inside its declared bounds."""
+    settings = {"credits": 2, "prefetch_depth": 1}
+
+    def tput():
+        spiky = [(lambda i, c=c: c * (5.0 if i % 5 == 4 else 1.0))
+                 for c in costs]
+        caps = ([max(settings["credits"], settings["prefetch_depth"])]
+                + [settings["credits"]] * (len(costs) - 1))
+        return SimPipeline(spiky, caps, train).run(24).throughput
+
+    def setter(name):
+        return lambda v: settings.__setitem__(name, v)
+
+    knobs = [Knob("credits", (1, 2, 3, 4, 6, 8), value=2,
+                  apply=setter("credits"), kind="queue",
+                  bytes_per_unit=1 << 20),
+             Knob("prefetch_depth", (1, 2, 4, 8), value=1,
+                  apply=setter("prefetch_depth"), kind="queue",
+                  bytes_per_unit=1 << 20)]
+    untuned = tput()
+    ctl = PipelineController(knobs, mode="throughput", seed=seed,
+                             tolerance=0.005)
+    for _ in range(24):
+        ctl.observe_window(tput())
+        for k in knobs:
+            assert k.value in k.candidates
+    ctl.restore_best()
+    assert tput() >= untuned * (1 - 1e-9)
+    domains = {k.name: set(k.candidates) for k in knobs}
+    for _, knob, _, value in ctl.decision_log():
+        assert value in domains[knob]
+
+
+# ---------------- memory-pressure guard ----------------
+
+def test_pressure_shrinks_queue_knobs_first_largest_first():
+    """The guard preempts the optimizer and halves queued bytes via the
+    queue knobs (largest estimated footprint first); compute knobs hold."""
+    w = SimWorkload()
+    w.settings.update(credits=8, prefetch_depth=8, row_tile=256, fuse=True)
+    pressure = {"level": 0.0}
+    ctl = PipelineController(
+        w.make_knobs(), mode="throughput", seed=0, tolerance=0.005,
+        memory_pressure=lambda: pressure["level"])
+    ctl.observe_window(w.throughput())        # settle + first probe
+    before = ctl.total_queued_bytes()
+    assert before > 0
+    pressure["level"] = 1.0
+    windows = 0
+    while ctl.total_queued_bytes() > before / 2:
+        decisions = ctl.observe_window(w.throughput())
+        windows += 1
+        assert windows <= 10, "guard failed to halve queued bytes"
+        assert all(d.action in ("pressure-shrink", "revert")
+                   for d in decisions)
+    # queue knobs shrank; compute knobs untouched while queues move
+    assert w.settings["credits"] < 8 and w.settings["prefetch_depth"] < 8
+    assert w.settings["row_tile"] == 256 and w.settings["fuse"] is True
+    # largest-footprint-first: credits (3 queues/batch) shrinks before
+    # prefetch_depth (1 batch) on the first guarded window
+    first = [d for d in ctl.decisions if d.action == "pressure-shrink"]
+    assert first[0].knob == "credits"
+    # pressure clears -> the optimizer resumes probing
+    pressure["level"] = 0.0
+    resumed = []
+    for _ in range(2):
+        resumed += ctl.observe_window(w.throughput())
+    assert any(d.action == "probe" for d in resumed)
+
+
+def test_pressure_shrinks_compute_knobs_only_at_queue_floor():
+    w = SimWorkload()
+    w.settings.update(credits=1, prefetch_depth=1, row_tile=512, fuse=False)
+    ctl = PipelineController(w.make_knobs(), mode="throughput",
+                             memory_pressure=lambda: 1.0)
+    ctl.observe_window(w.throughput())
+    shrunk = [d.knob for d in ctl.decisions if d.action == "pressure-shrink"]
+    assert "row_tile" in shrunk                # queues at floor -> compute
+    assert w.settings["row_tile"] == 256
+
+
+def test_pressure_on_live_executor_no_deadlock_no_drops():
+    """A sustained pressure event on the real executor shrinks the staging
+    footprint >= 2x and every batch still arrives exactly once."""
+    N = 12
+
+    def src():
+        for i in range(N):
+            yield {"x": np.full((4, 4), i, np.int32)}
+
+    ctl = PipelineController([], mode="throughput", window_deliveries=2,
+                             memory_pressure=lambda: 1.0)
+    ex = StreamingExecutor(lambda b: b, src(), credits=4, max_credits=8,
+                           autotune=ctl)
+    before = ctl.total_queued_bytes()
+    got = [int(b["x"][0, 0]) for b in ex]
+    assert got == list(range(N))               # in order, none dropped
+    assert ex.stats.dropped_stale == 0
+    assert ex.current_credits == 1             # shrunk to the floor
+    assert ctl.total_queued_bytes() <= before / 2
+    assert ex.join(timeout=2.0)
+
+
+# ---------------- occupancy-mode hysteresis (oscillation damper) ----------
+
+def _alternating_signals(ctl, windows=12):
+    """Feed grow/shrink-inducing windows alternately; return resize log."""
+    for i in range(windows):
+        if i % 2 == 0:
+            ctl.observe_window(1.0, starved=ctl.window_deliveries,
+                               always_full=False)
+        else:
+            ctl.observe_window(1.0, starved=0, always_full=True)
+    return [d for d in ctl.decisions if d.action in ("grow", "shrink")]
+
+
+def _occupancy_controller(hysteresis):
+    store = {"credits": 4}
+    knob = Knob("credits", tuple(range(1, 9)), value=4,
+                apply=lambda v: store.__setitem__("credits", v),
+                kind="queue", bytes_per_unit=1 << 20)
+    return PipelineController([knob], mode="occupancy",
+                              window_deliveries=4, hysteresis=hysteresis)
+
+
+def test_hysteresis_damps_adaptive_credit_oscillation():
+    """Alternating starve/full signals ping-pong an undamped controller
+    every window; hysteresis suppresses the reversals."""
+    undamped = _occupancy_controller(hysteresis=0)
+    resizes0 = _alternating_signals(undamped)
+    assert undamped.suppressed_flips == 0
+    # undamped: every window reverses direction with a 1-window gap
+    flips0 = sum(1 for a, b in zip(resizes0, resizes0[1:])
+                 if a.action != b.action)
+    assert flips0 >= 8
+
+    damped = _occupancy_controller(hysteresis=2)
+    resizes2 = _alternating_signals(damped)
+    assert damped.suppressed_flips >= 3
+    assert len(resizes2) < len(resizes0)
+    # no reversal ever lands within the damper window
+    for a, b in zip(resizes2, resizes2[1:]):
+        if a.action != b.action:
+            assert b.window - a.window > 2
+
+
+# ---------------- knob-application equivalence ----------------
+
+def _fit_batches():
+    return synth.dataset_batches("I", rows=3000, batch_size=1000, seed=7)
+
+
+def _assert_bit_identical(want, got, msg):
+    assert set(want) == set(got)
+    for k in want:
+        np.testing.assert_array_equal(np.asarray(want[k]),
+                                      np.asarray(got[k]),
+                                      err_msg=f"{msg}/{k}")
+
+
+def test_with_knobs_matches_fresh_compile_bit_exact():
+    """with_knobs(row_tile/fuse) re-plans in place; outputs must be
+    bit-identical to compiling the same pipeline fresh at those settings."""
+    raw = next(synth.dataset_batches("I", rows=600, batch_size=600, seed=9))
+    p = paper_pipeline("II", small_vocab=2048)
+    cp = p.compile(backend="pallas")
+    cp.fit(_fit_batches())
+    base_tile = cp.plan.row_tile
+
+    swapped = cp.with_knobs(row_tile=128, fuse={"sparse"})
+    assert swapped.plan.row_tile == 128
+    assert swapped.fuse_spec() == frozenset({"sparse"})
+    fresh = p.compile(backend="pallas", row_tile=128, fuse={"sparse"})
+    fresh.fit(_fit_batches())
+    _assert_bit_identical(fresh(raw), swapped(raw), "row_tile=128")
+
+    # toggling back restores the original program's outputs exactly
+    back = swapped.with_knobs(row_tile=base_tile, fuse="auto")
+    assert back.plan.row_tile == base_tile and back.fuse_spec() == "auto"
+    _assert_bit_identical(cp(raw), back(raw), "round-trip")
+
+
+def test_row_tile_swap_mid_run_bit_identical():
+    """Flipping row_tile mid-stream (the controller's actuator path) must
+    not perturb a single delivered byte: every batch — whichever compile
+    processed it — equals the fresh-compile reference."""
+    batches = list(synth.dataset_batches("I", rows=4000, batch_size=1000,
+                                         seed=3))
+    p = paper_pipeline("II", small_vocab=2048)
+    cp = p.compile(backend="pallas")
+    cp.fit(_fit_batches())
+    fresh = p.compile(backend="pallas", row_tile=128)
+    fresh.fit(_fit_batches())
+
+    ex = StreamingExecutor(cp, iter(batches), credits=2)
+    it = iter(ex)
+    got = [next(it), next(it)]
+    ex.swap_pipeline(cp.with_knobs(row_tile=128))
+    got.extend(it)
+    assert ex.pipeline.plan.row_tile == 128
+    assert len(got) == len(batches)
+    for i, (raw, out) in enumerate(zip(batches, got)):
+        _assert_bit_identical(fresh(raw), out, f"batch{i}")
+
+
+# ---------------- virtual-clock seam through the live executor ----------
+
+def test_virtual_clock_drives_stage_timers():
+    """StageStats timing flows through the injected clock: logical
+    advances in the transform land EXACTLY in its busy counter — no
+    wall-clock in the accounting path."""
+    clock = VirtualClock()
+
+    def pipe(b):
+        clock.advance(0.25)
+        return b
+
+    def src(n=4):
+        for i in range(n):
+            yield {"x": np.full((2, 2), i, np.int32)}
+
+    ex = StreamingExecutor(pipe, src(), credits=2, clock=clock)
+    assert sum(1 for _ in ex) == 4
+    assert ex.stats.stages["transform"].busy_s == 1.0   # 4 * 0.25, exact
+    assert ex.stats.stages["place"].busy_s == 0.0       # nobody advanced
+    # all waits are logical too, so they are bounded by the total advance
+    assert 0.0 <= ex.stats.consumer_wait_s <= 1.0
+    assert ex.join(timeout=2.0)
+
+
+def test_on_delivery_windows_use_injected_clock():
+    """Window throughput is measured on the controller's clock: feeding
+    logical timestamps yields exact batches/sec, deterministically."""
+    clock = VirtualClock()
+    store = {"credits": 2}
+    knob = Knob("credits", (1, 2, 3, 4), value=2,
+                apply=lambda v: store.__setitem__("credits", v),
+                kind="queue", bytes_per_unit=1 << 20)
+    ctl = PipelineController([knob], mode="occupancy", clock=clock,
+                             window_deliveries=4, hysteresis=0)
+    decisions = []
+    for _ in range(4):
+        clock.advance(0.5)                   # 2 deliveries / logical second
+        decisions += ctl.on_delivery(wait_s=0.2, ready_full=False)
+    # every delivery starved -> the window closed with one grow decision
+    assert [d.action for d in decisions] == ["grow"]
+    assert store["credits"] == 3
